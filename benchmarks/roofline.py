@@ -1,0 +1,83 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+  compute    = FLOPs            / (chips * 197e12  bf16 FLOP/s)
+  memory     = HBM bytes        / (chips * 819e9   B/s)
+  collective = collective bytes / (chips * 50e9    B/s per ICI link)
+
+FLOPs/bytes: both the scan-extrapolated HLO numbers and the analytic
+model FLOPs are reported; the dominant term and the MODEL/HLO ratio are
+derived.  Reads experiments/dryrun/*.json written by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+
+def analyze(dirpath: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(path))
+        chips = d["n_devices"]
+        flops_hlo = max(d.get("flops_extrapolated", d.get("flops", 0.0)),
+                        0.0) * chips
+        flops_emul = d.get("flops_analytic", 0.0)   # incl. emulation factor
+        # useful model FLOPs (6·N_active·D math without the (1+r) residual
+        # emulation multiplier) — the MFU numerator
+        rank = d.get("rank", 16)
+        mult = 1.0 + (rank if str(d.get("backend", "")).startswith(
+            "residual") else 0.0)
+        flops_model = flops_emul / mult
+        hbm = max(d.get("hbm_bytes_extrapolated", d.get("hbm_bytes", 0.0)),
+                  0.0) * chips
+        coll = sum(d.get("collectives_extrapolated",
+                         d.get("collectives", {})).values()) * chips
+
+        t_model = flops_model / (chips * PEAK_FLOPS)
+        t_emul = max(flops_emul, flops_hlo) / (chips * PEAK_FLOPS)
+        t_memory = max(hbm, 0.0) / (chips * HBM_BW)
+        t_coll = max(coll, 0.0) / (chips * ICI_BW)
+        terms = {"compute": t_emul, "memory": t_memory, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        frac = t_model / bound if bound else 0.0
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "backend": d.get("backend"),
+            "t_compute_model_s": f"{t_model:.4e}",
+            "t_compute_emul_s": f"{t_emul:.4e}",
+            "t_memory_s": f"{t_memory:.4e}",
+            "t_collective_s": f"{t_coll:.4e}",
+            "bottleneck": dom,
+            "roofline_fraction": round(frac, 4),
+            "model_over_hlo": round(flops_model / flops_hlo, 3)
+            if flops_hlo else None,
+            "GiB_per_dev": round(d["bytes_per_device"] / 2**30, 2),
+            "fits_16GiB": d["bytes_per_device"] < 16 * 2**30,
+        })
+    return rows
+
+
+def main():
+    import csv, io, sys
+    rows = analyze()
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    keys = list(rows[0].keys())
+    w = csv.DictWriter(sys.stdout, fieldnames=keys)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Benchmark driver: one function per paper table/figure + kernel
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV summary lines
+plus the full per-table CSVs."""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+
+
+def _csv(rows) -> str:
+    if not rows:
+        return ""
+    keys = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=keys)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    return buf.getvalue()
+
+
+def kernel_microbench():
+    """LUT kernel vs residual vs exact matmul (CPU wall time; the real
+    target numbers come from the §Roofline analysis)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 256, (256, 256)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, 256, (256, 256)).astype(np.int32))
+    lut = jnp.asarray(ops.get_lut("design2"))
+    F, G = ops.get_factors("design2", 16)
+    rows = []
+
+    def timed(name, fn):
+        fn()  # compile
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append({"kernel": name, "us_per_call": round(us, 1),
+                     "shape": "256x256x256"})
+
+    timed("exact_matmul", lambda: ref.exact_matmul_ref(a, b))
+    timed("lut_gather_xla", lambda: ref.approx_matmul_ref(a, b, lut))
+    timed("residual_rank16_xla",
+          lambda: ref.residual_corrected_matmul_ref(a, b, F, G))
+    return rows
+
+
+def main() -> None:
+    from . import tables
+    t_all = time.perf_counter()
+    summary = []
+    for name, fn in tables.ALL.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"### {name}")
+        print(_csv(rows))
+        summary.append((name, dt, len(rows)))
+    print("### kernel_microbench")
+    rows = kernel_microbench()
+    print(_csv(rows))
+
+    print("### summary  (name,us_per_call,derived)")
+    for name, dt, n in summary:
+        print(f"{name},{dt:.0f},{n}_rows")
+    print(f"total_wall_s,{time.perf_counter() - t_all:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the paper's contribution in five steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+# 1. The multicolumn 3,3:2 inexact compressor (paper Fig. 2 / Table 1)
+from repro.core import compressors as C
+stats = C.compressor_stats("3,3:2")
+print(f"3,3:2 compressor: NED={stats['NED_C']:.5f} (paper: 0.08125), "
+      f"{int(stats['ER']*128)}/128 rows erroneous (paper: 48)")
+
+# 2. The two proposed approximate multipliers (Figs. 8(d), 10(f))
+from repro.core import metrics, multipliers as M
+for name in ("design1", "design2"):
+    s = metrics.multiplier_stats(M.MULTIPLIERS[name])
+    print(f"{name}: MED={s['MED']:.1f} NED={s['NED']*1e3:.2f}e-3 "
+          f"ER={s['ER']*100:.1f}%")
+
+# 3. A single approximate product, bit-exact vs the gate-level sim
+print("design2: 200 x 117 =", int(M.mult_design2(200, 117)),
+      "(exact:", 200 * 117, ")")
+
+# 4. The LUT + an approximate quantized matmul in JAX
+import jax.numpy as jnp
+from repro.quant import QuantConfig, qdot
+x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)), jnp.float32)
+w = jnp.asarray(np.random.default_rng(1).normal(size=(64, 8)), jnp.float32)
+y_apx = qdot(x, w, QuantConfig(design="design2"))
+y_ref = x @ w
+rel = float(jnp.abs(y_apx - y_ref).mean() / jnp.abs(y_ref).mean())
+print(f"approximate quantized matmul rel err: {rel:.3f}")
+
+# 5. The Pallas TPU kernel (interpret mode on CPU)
+from repro.kernels import ops
+from repro.kernels.approx_matmul import lut_matmul
+a = jnp.asarray(np.random.default_rng(2).integers(0, 256, (128, 128)))
+b = jnp.asarray(np.random.default_rng(3).integers(0, 256, (128, 128)))
+s = lut_matmul(a, b, jnp.asarray(ops.get_lut("design2")))
+print("Pallas LUT-matmul output:", s.shape, s.dtype)

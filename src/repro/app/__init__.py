@@ -1,0 +1,1 @@
+from . import sharpening  # noqa: F401

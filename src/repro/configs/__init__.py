@@ -1,0 +1,95 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(name)`` returns the full-size ArchConfig; ``get_smoke(name)`` a
+reduced same-family config for CPU tests; ``input_specs(cfg, shape)``
+ShapeDtypeStruct stand-ins for the dry-run; ``SHAPES`` the assigned
+input-shape grid.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ArchConfig
+
+ARCHS = [
+    "nemotron_4_340b", "minitron_8b", "gemma_7b", "qwen3_1_7b",
+    "whisper_small", "xlstm_125m", "internvl2_76b", "mixtral_8x7b",
+    "llama4_scout_17b_a16e", "recurrentgemma_2b",
+]
+
+# shape grid: name -> (seq_len, global_batch, kind)
+SHAPES: Dict[str, tuple] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.SMOKE
+
+
+def supported_cells(name: str):
+    """The (arch x shape) cells this arch runs (long_500k needs
+    sub-quadratic mixing; see DESIGN.md §Arch-applicability)."""
+    cfg = get(name)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    'train'/'prefill' lower the full-sequence step; 'decode' lowers
+    serve_step (1 new token against a seq_len-deep cache/state)."""
+    seq, batch, kind = SHAPES[shape_name]
+    # whisper's positional capacity is bounded (see DESIGN.md): clamp.
+    if cfg.family == "encdec":
+        seq = min(seq, 448)
+    tok = jax.ShapeDtypeStruct((batch, seq if kind != "decode" else 1),
+                               jnp.int32)
+    specs: Dict[str, object] = {"tokens": tok}
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "encdec":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (batch, 1500, cfg.frontend_dim or cfg.d_model), jnp.float32)
+    if cfg.family == "vlm" and kind != "decode":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_prefix, cfg.frontend_dim or cfg.d_model),
+            jnp.float32)
+    return specs
+
+
+def make_smoke_batch(cfg: ArchConfig, batch: int = 2, seq: int = 16,
+                     seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    b = {"tokens": rng.integers(0, cfg.vocab, (batch, seq)).astype(np.int32),
+         "labels": rng.integers(0, cfg.vocab, (batch, seq)).astype(np.int32)}
+    if cfg.family == "encdec":
+        b["frontend"] = rng.normal(size=(batch, 8, cfg.frontend_dim or
+                                         cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        b["frontend"] = rng.normal(size=(batch, cfg.n_prefix,
+                                         cfg.frontend_dim or cfg.d_model)
+                                   ).astype(np.float32)
+    return b

@@ -1,0 +1,13 @@
+"""Whisper-small [arXiv:2212.04356; unverified]: enc-dec, conv frontend
+STUB (input_specs supplies precomputed 1500-frame embeddings).  Decoder
+positional capacity 448 -> 32k shapes clamp (DESIGN.md)."""
+from dataclasses import replace
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="encdec", n_layers=12, d_model=768,
+    n_heads=12, n_kv=12, d_ff=3072, vocab=51865, mlp_kind="gelu",
+    enc_layers=12, enc_seq=1500, frontend_dim=768, max_seq=448,
+)
+SMOKE = replace(CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                n_kv=4, d_ff=256, vocab=512, frontend_dim=64, max_seq=64)

@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — compressors, multipliers, metrics.
+
+Single source of truth: gate-level functional models (`compressors`,
+`multipliers`), from which LUTs (`lut`), error metrics (`metrics`) and
+hardware proxies (`cost`) all derive.
+"""
+from . import compressors, cost, lut, metrics, multipliers  # noqa: F401
+
+__all__ = ["compressors", "multipliers", "metrics", "cost", "lut"]

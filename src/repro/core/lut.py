@@ -1,0 +1,88 @@
+"""LUT formulation of the approximate multipliers + error decomposition.
+
+Any 8x8 unsigned multiplier is exactly a 256x256 -> uint16 lookup table.
+The LUT is generated from the gate-level simulation (single source of
+truth) and is what the JAX/Pallas execution layers consume.
+
+TPU-native reformulation (see DESIGN.md §2.1):
+
+    approx(a, b) = a*b + e(a, b)
+
+where the error surface e is *exactly low-rank over the bit-product
+basis*: every inexact compressor site's ED is a boolean function of a few
+pp bits, so e(a,b) = sum_r f_r(a) * g_r(b) with small rank.  We compute
+the exact minimal rank numerically (integer row-reduction over the
+256x256 error matrix) and also provide a truncated-SVD float variant.
+
+This turns an approximate int8 matmul into
+
+    A @_approx B = A @ B + sum_r F_r(A) @ G_r(B)
+
+i.e. pure MXU work (1 + rank small matmuls) with per-element LUTs only on
+the (256-entry) operand-indexed factor vectors.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from .multipliers import MULTIPLIERS, exhaustive_products
+
+
+@lru_cache(maxsize=None)
+def build_lut(name: str) -> np.ndarray:
+    """(256,256) int32 product table for a registered multiplier."""
+    fn = MULTIPLIERS[name]
+    return exhaustive_products(fn).astype(np.int32)
+
+
+@lru_cache(maxsize=None)
+def error_table(name: str) -> np.ndarray:
+    """(256,256) int32  e(a,b) = approx(a,b) - a*b."""
+    exact = np.arange(256, dtype=np.int64)[:, None] * np.arange(256)[None, :]
+    return (build_lut(name).astype(np.int64) - exact).astype(np.int32)
+
+
+def exact_rank(name: str) -> int:
+    """Exact linear-algebra rank of the error surface over the rationals."""
+    e = error_table(name).astype(np.float64)
+    return int(np.linalg.matrix_rank(e, tol=1e-6))
+
+
+@lru_cache(maxsize=None)
+def error_factors(name: str, rank: int | None = None,
+                  ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """SVD factorization  e ~= F @ G  with F (256,r), G (r,256).
+
+    Returns (F, G, max_abs_residual).  With rank=None the exact rank is
+    used, making the factorization exact up to float64 rounding (residual
+    ~1e-9 * scale); tests assert the reconstruction is integer-exact after
+    rounding.
+    """
+    e = error_table(name).astype(np.float64)
+    u, s, vt = np.linalg.svd(e, full_matrices=False)
+    if rank is None:
+        rank = int((s > s[0] * 1e-12).sum()) if s[0] > 0 else 0
+    F = u[:, :rank] * s[:rank]
+    G = vt[:rank, :]
+    resid = float(np.abs(F @ G - e).max()) if rank else float(np.abs(e).max())
+    return F.astype(np.float32), G.astype(np.float32), resid
+
+
+def rank_profile(name: str, tol_meds=(0.0, 0.5, 2.0, 8.0)) -> Dict[str, object]:
+    """How fast the error surface compresses: rank needed for a given mean
+    |residual| budget (in output ULPs)."""
+    e = error_table(name).astype(np.float64)
+    u, s, vt = np.linalg.svd(e, full_matrices=False)
+    out = {"exact_rank": int((s > (s[0] if s[0] else 1) * 1e-12).sum())}
+    for tol in tol_meds:
+        lo = None
+        for r in range(0, len(s) + 1):
+            resid = u[:, :r] * s[:r] @ vt[:r] - e if r else -e
+            if np.abs(resid).mean() <= tol:
+                lo = r
+                break
+        out[f"rank@med<={tol}"] = lo
+    return out

@@ -1,0 +1,146 @@
+"""Pallas TPU kernels for approximate-multiplier matmuls.
+
+Two kernels:
+
+  * ``lut_matmul``   — paper-faithful: every scalar product goes through
+    the 256x256 approximate-product LUT (bit-exact vs. the gate-level
+    sim).  The LUT (256 KiB int32) is pinned in VMEM and shared by all
+    grid steps; A/B are tiled (TM,TK)x(TK,TN) with the int32 output tile
+    revisited along the K grid axis as accumulator.  TPU adaptation of
+    the paper's "replace the multiplier cell": the gather runs on the
+    VPU, accumulation stays in VMEM.
+
+  * ``residual_matmul`` — beyond-paper fast path: exact matmul on the
+    MXU plus a rank-r correction  sum_r F_r(A) @ G_r(B)  from the SVD
+    factorization of the error surface (core.lut.error_factors).  All
+    FLOPs are MXU matmuls; the only VPU work is two 256-row table
+    lookups per operand tile.  Fidelity vs. r is measured and reported
+    in EXPERIMENTS.md §Perf (the error surface is NOT exactly low-rank —
+    measured rank 247 — so this path trades bit-exactness for speed).
+
+Block shapes default to MXU-aligned (128, 128) tiles.  Kernels are
+validated against kernels.ref in interpret mode (CPU container); on real
+TPU hardware pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Kernel A: LUT-gather matmul (paper-faithful)
+# ---------------------------------------------------------------------------
+
+def _lut_matmul_kernel(a_ref, b_ref, lut_ref, out_ref, *, n_k: int):
+    """Grid (M/TM, N/TN, K/TK); K innermost so out tile accumulates."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.int32)          # (TM, TK)
+    b = b_ref[...].astype(jnp.int32)          # (TK, TN)
+    lut = lut_ref[...].reshape(-1)            # (65536,) int32 in VMEM
+
+    def body(kk, acc):
+        idx = a[:, kk][:, None] * 256 + b[kk, :][None, :]   # (TM, TN)
+        return acc + jnp.take(lut, idx, axis=0)
+
+    out_ref[...] += jax.lax.fori_loop(
+        0, a.shape[1], body, jnp.zeros_like(out_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
+               block: Tuple[int, int, int] = (128, 128, 128),
+               interpret: bool = True) -> jax.Array:
+    """S[m,n] = sum_k LUT[a[m,k], b[k,n]]   (uint8-valued operands).
+
+    a: (M,K), b: (K,N) integer arrays in [0,255]; lut: (256,256) int32.
+    M,K,N must be multiples of the block shape (pad upstream).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    TM, TN, TK = block
+    assert M % TM == 0 and N % TN == 0 and K % TK == 0, \
+        (a.shape, b.shape, block)
+    n_k = K // TK
+    grid = (M // TM, N // TN, n_k)
+    return pl.pallas_call(
+        functools.partial(_lut_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((256, 256), lambda i, j, k: (0, 0)),  # VMEM-pinned
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32), lut.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: exact MXU matmul + rank-r error correction (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.int32)            # (TM, TK)
+    b = b_ref[...].astype(jnp.int32)            # (TK, TN)
+    F = f_ref[...]                              # (256, r) f32
+    G = g_ref[...]                              # (r, 256) f32
+
+    # exact product on the MXU
+    exact = jax.lax.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                        precision=jax.lax.Precision.HIGHEST)
+    # rank-r correction, also MXU: (TM, TK*r) @ (TK*r, TN)
+    r = F.shape[1]
+    tm, tk = a.shape
+    tn = b.shape[1]
+    Fa = jnp.take(F, a.reshape(-1), axis=0).reshape(tm, tk * r)
+    Gb = jnp.take(G, b.reshape(-1), axis=1)        # (r, TK*TN)
+    Gb = Gb.reshape(r, tk, tn).transpose(1, 0, 2).reshape(tk * r, tn)
+    corr = jax.lax.dot(Fa, Gb, precision=jax.lax.Precision.HIGHEST)
+    out_ref[...] += exact + corr
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def residual_matmul(a: jax.Array, b: jax.Array, F: jax.Array, G: jax.Array,
+                    block: Tuple[int, int, int] = (128, 128, 128),
+                    interpret: bool = True) -> jax.Array:
+    """Exact matmul + rank-r approximate-error correction (float32 out)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    TM, TN, TK = block
+    assert M % TM == 0 and N % TN == 0 and K % TK == 0
+    n_k = K // TK
+    r = F.shape[1]
+    grid = (M // TM, N // TN, n_k)
+    return pl.pallas_call(
+        functools.partial(_residual_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((256, r), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((r, 256), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32),
+      F.astype(jnp.float32), G.astype(jnp.float32))

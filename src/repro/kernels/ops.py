@@ -1,0 +1,118 @@
+"""Public jit'd wrappers around the approximate-matmul kernels.
+
+``approx_matmul`` is the operator the quantized layers call.  Backends:
+
+  'xla'      — jnp.take-based formulation (ref semantics); what the big
+               model graphs lower with on any platform (the dry-run path).
+  'pallas'   — the Pallas LUT kernel (interpret mode on CPU).
+  'residual' — exact MXU matmul + rank-r correction (fast, approximate
+               emulation; r configurable).
+  'exact'    — plain integer matmul (the baseline multiplier).
+
+All backends share a straight-through-estimator VJP: the backward pass
+differentiates the *exact* product (standard QAT practice), so training
+runs through the paper's multiplier in the forward pass only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .approx_matmul import lut_matmul, residual_matmul
+
+_LUT_CACHE: dict = {}
+
+
+def get_lut(design: str) -> np.ndarray:
+    """LUT for a registered multiplier design ('design1', 'design2', ...).
+
+    'exact' returns the true product table."""
+    if design not in _LUT_CACHE:
+        from repro.core import lut as lutmod
+        if design == "exact":
+            a = np.arange(256, dtype=np.int64)
+            _LUT_CACHE[design] = (a[:, None] * a[None, :]).astype(np.int32)
+        else:
+            _LUT_CACHE[design] = lutmod.build_lut(design)
+    return _LUT_CACHE[design]
+
+
+def get_factors(design: str, rank: int = 32):
+    from repro.core import lut as lutmod
+    F, G, _ = lutmod.error_factors(design, rank)
+    return F, G
+
+
+# ---------------------------------------------------------------------------
+# STE-wrapped approximate matmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def approx_matmul(a: jax.Array, b: jax.Array, design: str = "design2",
+                  backend: str = "xla", rank: int = 32) -> jax.Array:
+    """S = A ⊗_approx B over uint8-valued int arrays. int32/float32 out.
+
+    a: (..., M, K), b: (K, N). Batched over leading dims of `a`.
+    """
+    return _approx_matmul_fwd_impl(a, b, design, backend, rank)
+
+
+def _approx_matmul_fwd_impl(a, b, design, backend, rank):
+    lead = a.shape[:-2]
+    M = int(np.prod(lead)) * a.shape[-2] if lead else a.shape[-2]
+    a2 = a.reshape(M, a.shape[-1])
+    if backend == "exact":
+        out = ref.exact_matmul_ref(a2, b)
+    elif backend == "xla":
+        # Faithful gather formulation. NB: materializes the (M,K,N) index
+        # surface unless XLA fuses it — fine at test/benchmark scale, use
+        # 'residual_xla' for the big-model graphs (see DESIGN.md §Perf).
+        out = ref.approx_matmul_ref(a2, b, get_lut(design))
+    elif backend == "pallas":
+        out = lut_matmul(a2, b, jnp.asarray(get_lut(design)))
+    elif backend == "residual":
+        F, G = get_factors(design, rank)
+        out = residual_matmul(a2, b, jnp.asarray(F), jnp.asarray(G))
+    elif backend == "residual_xla":
+        # Pure-XLA rank-r emulation: exact MXU matmul + einsum correction.
+        # This is what the production-mesh graphs lower with.
+        F, G = get_factors(design, rank)
+        out = ref.residual_corrected_matmul_ref(a2, b, jnp.asarray(F),
+                                                jnp.asarray(G))
+    else:
+        raise ValueError(backend)
+    # float32 output so the STE custom_vjp has a nontrivial tangent space
+    # (int32 outputs have no gradient).  NB: sums beyond 2^24 lose ULPs in
+    # f32 — irrelevant at NN noise level, asserted bounded in tests.
+    out = out.astype(jnp.float32)
+    return out.reshape(*lead, a.shape[-2], b.shape[-1])
+
+
+def _approx_matmul_fwd(a, b, design, backend, rank):
+    return _approx_matmul_fwd_impl(a, b, design, backend, rank), (a, b)
+
+
+def _approx_matmul_bwd(design, backend, rank, res, g):
+    a, b = res
+    g = g.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    da = jnp.matmul(g, bf.T)
+    lead = a.shape[:-2]
+    g2 = g.reshape(-1, g.shape[-1])
+    a2 = af.reshape(-1, af.shape[-1])
+    db = jnp.matmul(a2.T, g2)
+    return da, db
+
+
+approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
+
+
+def approx_mul(a: jax.Array, b: jax.Array, design: str = "design2") -> jax.Array:
+    """Elementwise approximate product (used by the image pipeline)."""
+    return ref.approx_mul_ref(a, b, get_lut(design))

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the approximate-multiply kernels.
+
+These are the semantic ground truth the Pallas kernels are validated
+against (tests sweep shapes/dtypes and assert_allclose).  All operate on
+unsigned-8-bit operand semantics: inputs are integer arrays in [0, 255].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def approx_mul_ref(a, b, lut: np.ndarray):
+    """Elementwise approximate product via the 256x256 LUT.
+
+    a, b: integer arrays (broadcastable) in [0,255]. Returns int32.
+    """
+    lut = jnp.asarray(lut, dtype=jnp.int32)
+    flat = lut.reshape(-1)
+    idx = a.astype(jnp.int32) * 256 + b.astype(jnp.int32)
+    return jnp.take(flat, idx, axis=0)
+
+
+def approx_matmul_ref(a, b, lut: np.ndarray):
+    """S[m,n] = sum_k LUT[a[m,k], b[k,n]]  (int32 accumulation).
+
+    a: (M,K) uint8-valued, b: (K,N) uint8-valued.
+    """
+    lut = jnp.asarray(lut, dtype=jnp.int32)
+    flat = lut.reshape(-1)
+    idx = a.astype(jnp.int32)[:, :, None] * 256 + b.astype(jnp.int32)[None, :, :]
+    return jnp.take(flat, idx, axis=0).sum(axis=1)
+
+
+def exact_matmul_ref(a, b):
+    """Exact integer matmul oracle (int32)."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def residual_corrected_matmul_ref(a, b, F: np.ndarray, G: np.ndarray):
+    """Beyond-paper fast path oracle: exact matmul + rank-r error model.
+
+    approx(a,b) ~= a*b + sum_r F[a,r] * G[r,b]; contraction distributes:
+       S = A@B + sum_r F_r(A) @ G_r(B)
+    F: (256, r) float32, G: (r, 256) float32 (from core.lut.error_factors).
+    """
+    exact = exact_matmul_ref(a, b).astype(jnp.float32)
+    Fa = jnp.take(jnp.asarray(F), a.astype(jnp.int32), axis=0)  # (M,K,r)
+    Gb = jnp.take(jnp.asarray(G), b.astype(jnp.int32), axis=1)  # (r,K,N)
+    corr = jnp.einsum("mkr,rkn->mn", Fa, Gb)
+    return exact + corr

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the 16x16 single-pod and 2x16x16 multi-pod meshes.
+
+For every cell this prints/records:
+  * compiled.memory_analysis()  (bytes/device -> does it fit 16 GiB HBM)
+  * compiled.cost_analysis()    (HLO FLOPs / bytes for §Roofline)
+  * collective bytes parsed from the compiled HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k [--multi-pod] [--all] [--out experiments/dryrun]
+
+NOTE: the first two lines of this file must stay first — jax locks the
+device count at first init.
+"""
+import argparse
+import json
+import re
+import sys
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer as T
+from repro.models.sharding import (PRODUCTION_RULES, SINGLE_POD_RULES,
+                                   logical_axis_rules)
+from repro.quant import QuantConfig
+from repro.train import OptConfig, make_serve_step, make_train_step
+from repro.train import optimizer as opt_mod
+from . import shardings as shd
+from .mesh import make_production_mesh
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in compiled HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r".*= *((?:\([^)]*\)|\S+)) ([\w-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2).rstrip(".0123456789")
+        base = None
+        for c in _COLLECTIVES:
+            if op.startswith(c.replace("-", "_")) or op.startswith(c):
+                base = c
+                break
+        if base is None:
+            continue
+        shapes = shape_re.findall(m.group(1))
+        nbytes = 0.0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[base] += nbytes
+    return out
+
+
+def analytic_flops(cfg, shape_name: str, qcfg) -> float:
+    """Model FLOPs for this cell (TOTAL across chips): 6·N_active·D for
+    train, 2·N_active·D for prefill, 2·N_active·B (+cache reads as flops
+    for attention) per decode step; attention seq^2 term added for
+    attention archs.  The 'residual_xla' backend multiplies matmul work
+    by (1 + rank) — reported via the multiplier field."""
+    seq, batch, kind = configs.SHAPES[shape_name]
+    if cfg.family == "encdec":
+        seq = min(seq, 448)
+    n_act = cfg.active_param_count()
+    mult = 1.0 + (qcfg.rank if qcfg.backend.startswith("residual") else 0.0)
+    attn_layers = sum(1 for k in cfg.pattern if k in ("attn", "moe"))
+    attn_frac = attn_layers / len(cfg.pattern) * cfg.n_layers
+    if kind == "train":
+        D = seq * batch
+        base = 6.0 * n_act * D
+        attn = 6.0 * 2.0 * batch * seq * min(seq, cfg.window or seq) \
+            * cfg.n_heads * cfg.hd * attn_frac
+        return base * mult + attn
+    if kind == "prefill":
+        D = seq * batch
+        base = 2.0 * n_act * D
+        attn = 2.0 * 2.0 * batch * seq * min(seq, cfg.window or seq) \
+            * cfg.n_heads * cfg.hd * attn_frac
+        return base * mult + attn
+    # decode: one token against a seq-deep cache/state
+    base = 2.0 * n_act * batch
+    attn = 2.0 * 2.0 * batch * min(seq, cfg.max_seq) \
+        * cfg.n_kv * cfg.hd * attn_frac
+    return base * mult + attn
+
+
+def _abstract_params(cfg) -> object:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda k: T.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               qcfg: Optional[QuantConfig] = None,
+               extra: Optional[dict] = None,
+               n_units_override: Optional[int] = None,
+               skip_probes: bool = False,
+               microbatches: int = 1) -> Dict[str, object]:
+    """Lower+compile one (arch, shape, mesh) cell; return analysis dict.
+
+    XLA's cost_analysis counts while-loop (scan) bodies ONCE, so the raw
+    per-device FLOPs/collective numbers under-report the layer stack.  We
+    therefore also lower 1-unit and 2-unit variants of the same cell and
+    extrapolate linearly:  total = f(1) + (n_units - 1) * (f(2) - f(1)).
+    This is exact for scanned stacks (the graph is affine in unit count).
+    """
+    cfg = configs.get(arch)
+    if n_units_override is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg,
+                          n_layers=n_units_override * len(cfg.pattern))
+    qcfg = qcfg or QuantConfig(design="design2", backend="residual_xla",
+                               rank=16)
+    seq, batch, kind = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = PRODUCTION_RULES if multi_pod else SINGLE_POD_RULES
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    result: Dict[str, object] = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "design": qcfg.design, "backend": qcfg.backend, "rank": qcfg.rank,
+    }
+    if extra:
+        result.update(extra)
+
+    with mesh, logical_axis_rules(rules, sizes):
+        p_abs = _abstract_params(cfg)
+        p_shard = shd.tree_shardings(p_abs, mesh)
+        specs = configs.input_specs(cfg, shape_name)
+        in_shard = shd.batch_shardings(specs, mesh)
+
+        if kind in ("train",):
+            ocfg = OptConfig()
+            o_abs = jax.eval_shape(lambda p: opt_mod.init(p, ocfg), p_abs)
+            o_shard = shd.tree_shardings(o_abs, mesh)
+            step = make_train_step(cfg, qcfg, ocfg, remat=True,
+                                   microbatches=microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, in_shard),
+                out_shardings=(p_shard, o_shard,
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(p_abs, o_abs, specs)
+        elif kind == "prefill":
+            from repro.train import make_prefill_step
+            step = make_prefill_step(cfg, qcfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, in_shard))
+            lowered = jitted.lower(p_abs, specs)
+        else:  # decode
+            s_max = min(seq, cfg.max_seq)
+            enc_abs = None
+            if cfg.family == "encdec":
+                enc_abs = jax.ShapeDtypeStruct(
+                    (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+            state_abs = jax.eval_shape(
+                lambda e: T.init_decode_state(cfg, batch, s_max, e), enc_abs)
+            state_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, shd.cache_spec(mesh, s.shape)),
+                state_abs)
+            step = make_serve_step(cfg, qcfg)
+            tok_spec = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            jitted = jax.jit(
+                step, in_shardings=(p_shard, state_shard,
+                                    shd.batch_shardings(tok_spec, mesh)),
+                out_shardings=(
+                    NamedSharding(mesh,
+                                  shd.batch_spec(mesh, 2, batch_size=batch)),
+                    NamedSharding(mesh,
+                                  shd.batch_spec(mesh, 3, batch_size=batch)),
+                    state_shard),
+                donate_argnums=(1,))
+            lowered = jitted.lower(p_abs, state_abs, tok_spec)
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    result["flops"] = float(cost.get("flops", 0.0))
+    result["hbm_bytes"] = float(cost.get("bytes accessed", 0.0))
+    result["collectives"] = collective_bytes(hlo)
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        result[attr] = getattr(mem, attr, None)
+    n_dev = int(np.prod(mesh.devices.shape))
+    # resident HBM per device: arguments (params/opt/batch, donated ones
+    # alias into outputs) + live temps at peak
+    result["bytes_per_device"] = (
+        (result["argument_size_in_bytes"] or 0)
+        + (result["temp_size_in_bytes"] or 0)
+        + max((result["output_size_in_bytes"] or 0)
+              - (result["alias_size_in_bytes"] or 0), 0))
+    result["n_devices"] = n_dev
+    result["model_params"] = cfg.param_count()
+    result["active_params"] = cfg.active_param_count()
+    result["flops_analytic"] = analytic_flops(cfg, shape_name, qcfg)
+
+    result["microbatches"] = microbatches
+    if not skip_probes:
+        # scan-body extrapolation probes (see docstring)
+        p1 = lower_cell(arch, shape_name, multi_pod, qcfg,
+                        n_units_override=1, skip_probes=True,
+                        microbatches=microbatches)
+        p2 = lower_cell(arch, shape_name, multi_pod, qcfg,
+                        n_units_override=2, skip_probes=True,
+                        microbatches=microbatches)
+        n_units = cfg.n_units
+        def extrap(k1, k2):
+            return k1 + (n_units - 1) * (k2 - k1)
+        result["flops_extrapolated"] = extrap(p1["flops"], p2["flops"])
+        result["hbm_bytes_extrapolated"] = extrap(p1["hbm_bytes"],
+                                                  p2["hbm_bytes"])
+        result["collectives_extrapolated"] = {
+            c: extrap(p1["collectives"][c], p2["collectives"][c])
+            for c in p1["collectives"]}
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every supported cell on this mesh")
+    ap.add_argument("--design", default="design2")
+    ap.add_argument("--backend", default="residual_xla")
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the 1/2-unit FLOP-extrapolation compiles "
+                         "(multi-pod pass: compile+memory proof only)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            name = configs.get(arch).name
+            for shp in configs.supported_cells(arch):
+                cells.append((name, shp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    qcfg = QuantConfig(design=args.design, backend=args.backend,
+                       rank=args.rank)
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shp in cells:
+        tag = f"{configs.canon(arch)}__{shp}__" \
+              f"{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            res = lower_cell(arch, shp, args.multi_pod, qcfg,
+                             skip_probes=args.no_probes)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+            gib = res["bytes_per_device"] / 2**30
+            fl = res.get("flops_extrapolated", res["flops"])
+            cl = sum(res.get("collectives_extrapolated",
+                             res["collectives"]).values())
+            print(f"OK   {tag}: {fl:.3e} flops/dev, "
+                  f"{gib:.2f} GiB/dev, coll={cl:.3e} B/dev")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+    print(f"dry-run complete: {len(cells) - failures}/{len(cells)} cells OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

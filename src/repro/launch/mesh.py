@@ -1,0 +1,30 @@
+"""Production mesh + logical-axis rules.
+
+make_production_mesh is a FUNCTION (never module-level state) so imports
+don't touch jax device initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (axes exist, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh):
+    """Axes that jointly shard the batch (pod folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

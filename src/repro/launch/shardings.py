@@ -1,0 +1,137 @@
+"""Parameter/optimizer/cache sharding policy (TP x FSDP) for the
+production mesh.
+
+Policy (MaxText-style, path+shape driven):
+  * tensor-parallel ("model") axis: ffn / heads / vocab / experts;
+  * FSDP ("data" [+ "pod"]) axis: one more large axis of every big
+    weight, so params+grads+opt state all scale 1/N_chips;
+  * small tensors (norms, routers, scalars) replicate;
+  * axes only shard when divisible by the mesh axis size (else replicate
+    that axis) — keeps every config lowerable on any mesh.
+
+The same policy shards optimizer state (same shape as params) and, for
+serving, KV caches (batch -> data, sequence -> model for long caches).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes, mesh_axis_sizes
+
+# (path regex, spec builder) — first match wins. Specs name LOGICAL roles;
+# axis indices are resolved against the actual rank (stacked layer dims).
+_RULES = [
+    (r"moe/(w_up|w_gate|w_down)$", ("expert",)),   # before generic w_* !
+    (r"embed$",            ("vocab_d",)),
+    (r"frontend_proj$",    ("last_model",)),
+    (r"(wq|wk|wv|w_gate|w_up|wz|wi|wf|wo_gate|w_in|w_gate_x|w_gate_a)$",
+                           ("last_model",)),
+    (r"(wo|w_down|w_out)$", ("m2_model",)),
+    (r"router$",           ("rep",)),
+    (r"(norm|a_param|conv|q_norm|k_norm)", ("rep",)),
+]
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    sizes = mesh_axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    fsdp_axes = data_axes(mesh)
+    fsdp = int(np.prod([sizes[a] for a in fsdp_axes]))
+    fsdp_name = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    rank = len(shape)
+    spec = [None] * rank
+
+    kind = None
+    for pat, (k,) in _RULES:
+        if re.search(pat, path):
+            kind = k
+            break
+    if kind in (None, "rep") or rank == 0:
+        return P(*spec)
+
+    if kind == "vocab_d":           # (vocab, d)
+        if _fits(shape[0], model):
+            spec[0] = "model"
+        if rank > 1 and _fits(shape[1], fsdp):
+            spec[1] = fsdp_name
+    elif kind == "expert":          # (n_units, E, d, f) or (E, d, f)
+        e_ax = rank - 3
+        if _fits(shape[e_ax], model):
+            spec[e_ax] = "model"     # expert parallelism
+        elif _fits(shape[rank - 1], model):
+            spec[rank - 1] = "model"  # E < axis: TP inside each expert
+        if _fits(shape[rank - 2], fsdp):
+            spec[rank - 2] = fsdp_name
+    elif kind == "last_model":      # (..., d_in, d_out): TP on out, FSDP in
+        if _fits(shape[-1], model):
+            spec[-1] = "model"
+        if rank >= 2 and _fits(shape[-2], fsdp):
+            spec[-2] = fsdp_name
+    elif kind == "m2_model":        # (..., d_in, d_out): TP on in, FSDP out
+        if rank >= 2 and _fits(shape[-2], model):
+            spec[-2] = "model"
+        if _fits(shape[-1], fsdp):
+            spec[-1] = fsdp_name
+    return P(*spec)
+
+
+def _path_str(keypath) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in keypath)
+
+
+def tree_shardings(tree, mesh) -> Any:
+    """NamedSharding pytree matching `tree` (params or opt state)."""
+    def one(keypath, leaf):
+        shape = getattr(leaf, "shape", ())
+        return NamedSharding(mesh, param_spec(_path_str(keypath), shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_spec(mesh, ndim: int = 2, batch_dim: int = 0,
+               batch_size: Optional[int] = None) -> P:
+    """Shard the batch dim over the data axes; replicate when the global
+    batch is not divisible (e.g. long_500k's batch=1)."""
+    sizes = mesh_axis_sizes(mesh)
+    ax = data_axes(mesh)
+    total = int(np.prod([sizes[a] for a in ax]))
+    spec = [None] * ndim
+    if batch_size is None or _fits(batch_size, total):
+        spec[batch_dim] = ax if len(ax) > 1 else ax[0]
+    return P(*spec)
+
+
+def batch_shardings(specs_tree, mesh):
+    def one(s):
+        return NamedSharding(mesh, batch_spec(mesh, len(s.shape),
+                                              batch_size=s.shape[0]))
+    return jax.tree.map(one, specs_tree)
+
+
+def cache_spec(mesh, shape) -> P:
+    """Decode state (KV cache (B, S, n_kv, hd), recurrent state (B, R)):
+    batch over the data axes; the trailing feature axis over 'model'
+    (Megatron-style contracted-dim sharding — the q@k einsum psums over
+    'model', which SPMD handles without re-layout; sharding the seq axis
+    instead trips involuntary full rematerialization in the partitioner)."""
+    sizes = mesh_axis_sizes(mesh)
+    ax = data_axes(mesh)
+    lead = ax if len(ax) > 1 else ax[0]
+    spec = [None] * len(shape)
+    total_data = int(np.prod([sizes[a] for a in ax]))
+    # state leaves are stacked over layers: (L, B, ...); batch is axis 1
+    b_ax = 1 if len(shape) >= 2 else 0
+    if len(shape) > b_ax and _fits(shape[b_ax], total_data):
+        spec[b_ax] = lead
+    if len(shape) >= 3 and _fits(shape[-1], sizes.get("model", 1)):
+        spec[-1] = "model"
+    return P(*spec)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer (mixtral-style top-k, llama4-style top-1).
+
+Capacity-based, sort-free dispatch using one-hot position ranking
+(MaxText-style "dropping" implementation): static shapes throughout so
+the layer lowers cleanly on the production mesh; experts are sharded on
+the "experts" logical axis (-> "model" mesh axis).
+
+Expert FFNs run through quant.qdot (the approximate multiplier), scanned
+over the expert axis to bound memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QuantConfig, qdot
+from . import layers
+from .sharding import constrain
+
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int, kind: str,
+             shared_ff: int = 0):
+    ks = jax.random.split(rng, 5)
+    glu = kind in ("geglu", "swiglu")
+    p = {
+        "router": layers.dense_init(ks[0], d_model, n_experts, scale=0.02),
+        "w_up": jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * (d_model ** -0.5),
+        "w_down": jax.random.normal(ks[2], (n_experts, d_ff, d_model)) * (d_ff ** -0.5),
+    }
+    if glu:
+        p["w_gate"] = jax.random.normal(ks[3], (n_experts, d_model, d_ff)) * (d_model ** -0.5)
+    if shared_ff:
+        p["shared"] = layers.mlp_init(ks[4], d_model, shared_ff, kind)
+    return p
+
+
+def moe(p, x, qcfg: QuantConfig, *, n_experts: int, top_k: int, kind: str,
+        capacity_factor: float = 1.25, shared: bool = False):
+    """x: (B, S, D) -> (B, S, D). Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    xt = constrain(x.reshape(T, D), "batch", None)
+    logits = qdot(xt, p["router"], qcfg)                       # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(T * top_k * capacity_factor / n_experts), 4)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (T,k,E)
+    flat = onehot.reshape(T * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=0) - 1                             # (T*k, E)
+    pos = (pos * flat).sum(-1).reshape(T, top_k)                   # (T, k)
+    keep = pos < C
+    eidx = gate_idx
+    # dispatch: build (E, C) token index table via scatter
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, top_k))
+    slot = jnp.where(keep, pos, C)                                 # drop -> C
+    table = jnp.full((n_experts, C + 1), T, jnp.int32)
+    table = table.at[eidx.reshape(-1), slot.reshape(-1)].set(
+        tok_ids.reshape(-1), mode="drop")
+    table = table[:, :C]                                           # (E, C)
+    xe_src = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], 0)
+    xe = jnp.take(xe_src, table, axis=0)                           # (E, C, D)
+    # EP over the expert axis when divisible; the capacity axis shards
+    # over data either way so the dispatch buffer never replicates.
+    xe = constrain(xe, "experts", "expert_cap", None)
+
+    glu = kind in ("geglu", "swiglu")
+    act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+
+    def expert_fn(carry, inp):
+        if glu:
+            xc, wu, wd, wg = inp
+            h = act(qdot(xc, wg, qcfg)) * qdot(xc, wu, qcfg)
+        else:
+            xc, wu, wd = inp
+            h = act(qdot(xc, wu, qcfg))
+        return carry, qdot(h, wd, qcfg)
+
+    ins = (xe, p["w_up"], p["w_down"]) + ((p["w_gate"],) if glu else ())
+    _, ye = jax.lax.scan(expert_fn, None, ins)                     # (E, C, D)
+
+    # combine: scatter-add back to tokens with gate weights
+    w = (gate_vals * keep).astype(jnp.float32)                     # (T, k)
+    out = jnp.zeros((T + 1, D), jnp.float32)
+    flat_tok = jnp.where(keep, tok_ids, T)
+    ye_tok = ye.reshape(n_experts * C, D)
+    # map each (e, c) slot back to its token id
+    slot_tok = table.reshape(-1)                                   # (E*C,)
+    # gate weight for each slot: find which (t, k) produced it
+    gate_table = jnp.zeros((n_experts, C + 1), jnp.float32)
+    gate_table = gate_table.at[eidx.reshape(-1), slot.reshape(-1)].set(
+        w.reshape(-1), mode="drop")
+    gw = gate_table[:, :C].reshape(-1)                             # (E*C,)
+    out = out.at[slot_tok].add(ye_tok * gw[:, None])
+    y = out[:T].reshape(B, S, D)
+
+    if shared and "shared" in p:
+        y = y + layers.mlp(p["shared"], x, qcfg, kind)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)                                             # (E,)
+    ce = jax.nn.one_hot(gate_idx[:, 0], n_experts).mean(0)
+    aux = n_experts * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,194 @@
+"""Recurrent blocks: xLSTM (sLSTM + mLSTM) and RG-LRU (recurrentgemma).
+
+Sub-quadratic sequence mixing — these are the architectures that run the
+long_500k shape.  RG-LRU uses an associative scan (O(log S) depth);
+mLSTM/sLSTM use lax.scan over time with O(1) state per step, and their
+serve_step consumes one token against carried recurrent state.
+
+All input/gate projections route through quant.qdot.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QuantConfig, qdot
+from . import layers
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM paper): matrix memory C (d_head x d_head per head)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(rng, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq": layers.dense_init(ks[0], d_model, d_model),
+        "wk": layers.dense_init(ks[1], d_model, d_model),
+        "wv": layers.dense_init(ks[2], d_model, d_model),
+        "wi": layers.dense_init(ks[3], d_model, n_heads, scale=0.02),
+        "wf": layers.dense_init(ks[4], d_model, n_heads, scale=0.02),
+        "wo": layers.dense_init(ks[5], d_model, d_model),
+        "norm": layers.rmsnorm_init(d_model),
+    }
+
+
+def mlstm_state(batch: int, n_heads: int, head_dim: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.zeros((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm(p, x, qcfg: QuantConfig, n_heads: int,
+          state: Optional[dict] = None):
+    """x: (B, S, D). Returns (y, final_state)."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    q = qdot(x, p["wq"], qcfg).reshape(B, S, n_heads, hd) / math.sqrt(hd)
+    k = qdot(x, p["wk"], qcfg).reshape(B, S, n_heads, hd) / math.sqrt(hd)
+    v = qdot(x, p["wv"], qcfg).reshape(B, S, n_heads, hd)
+    it = qdot(x, p["wi"], qcfg)   # (B, S, H) input gate (pre-exp)
+    ft = qdot(x, p["wf"], qcfg)   # (B, S, H) forget gate (pre-sigmoid/exp)
+
+    if state is None:
+        state = mlstm_state(B, n_heads, hd)
+
+    def step(carry, inp):
+        C, n, m = carry["C"], carry["n"], carry["m"]
+        qt, kt, vt, ii, ff = inp       # (B,H,hd) x3, (B,H) x2
+        logf = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(logf + m, ii)            # stabilizer state
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])     # (B,H,hd,hd)
+        n = f_g[..., None] * n + i_g[..., None] * kt
+        h_num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)), 1.0)
+        h = h_num / h_den[..., None]
+        return {"C": C, "n": n, "m": m_new}, h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), it.transpose(1, 0, 2),
+          ft.transpose(1, 0, 2))
+    final, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    h = layers.rmsnorm(h, p["norm"])
+    return qdot(h, p["wo"], qcfg), final
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM paper): scalar memory with exponential gating
+# ---------------------------------------------------------------------------
+
+def slstm_init(rng, d_model: int):
+    ks = jax.random.split(rng, 5)
+    return {
+        "wz": layers.dense_init(ks[0], d_model, d_model),
+        "wi": layers.dense_init(ks[1], d_model, d_model, scale=0.02),
+        "wf": layers.dense_init(ks[2], d_model, d_model, scale=0.02),
+        "wo_gate": layers.dense_init(ks[3], d_model, d_model, scale=0.02),
+        "wo": layers.dense_init(ks[4], d_model, d_model),
+        "norm": layers.rmsnorm_init(d_model),
+    }
+
+
+def slstm_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z, "m": z}
+
+
+def slstm(p, x, qcfg: QuantConfig, state: Optional[dict] = None):
+    B, S, D = x.shape
+    z = jnp.tanh(qdot(x, p["wz"], qcfg))
+    ii = qdot(x, p["wi"], qcfg)
+    ff = qdot(x, p["wf"], qcfg)
+    oo = jax.nn.sigmoid(qdot(x, p["wo_gate"], qcfg))
+    if state is None:
+        state = slstm_state(B, D)
+
+    def step(carry, inp):
+        c, n, m = carry["c"], carry["n"], carry["m"]
+        zt, it, ft, ot = inp
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = ot * c / jnp.maximum(n, 1.0)
+        return {"c": c, "n": n, "m": m_new}, h
+
+    xs = (z.transpose(1, 0, 2), ii.transpose(1, 0, 2),
+          ff.transpose(1, 0, 2), oo.transpose(1, 0, 2))
+    final, hs = jax.lax.scan(step, state, xs)
+    h = layers.rmsnorm(hs.transpose(1, 0, 2), p["norm"])
+    return qdot(h, p["wo"], qcfg), final
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma / Griffin) + temporal conv
+# ---------------------------------------------------------------------------
+
+def rglru_init(rng, d_model: int, d_rnn: int, conv_width: int = 4):
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": layers.dense_init(ks[0], d_model, d_rnn),
+        "w_gate_x": layers.dense_init(ks[1], d_model, d_rnn, scale=0.02),
+        "w_gate_a": layers.dense_init(ks[2], d_model, d_rnn, scale=0.02),
+        "a_param": jnp.log(jnp.expm1(  # softplus^-1 of Lambda in [0.9,0.999]
+            -jnp.log(jnp.linspace(0.9, 0.999, d_rnn)))),
+        "conv": jax.random.normal(ks[3], (conv_width, d_rnn)) * 0.1,
+        "w_out": layers.dense_init(ks[4], d_rnn, d_model),
+    }
+
+
+def rglru_state(batch: int, d_rnn: int, conv_width: int = 4):
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), jnp.float32)}
+
+
+def rglru(p, x, qcfg: QuantConfig, state: Optional[dict] = None):
+    """Griffin recurrent block. x: (B,S,D) -> (y, final_state)."""
+    B, S, D = x.shape
+    u = qdot(x, p["w_in"], qcfg)                        # (B,S,R)
+    R = u.shape[-1]
+    cw = p["conv"].shape[0]
+    if state is None:
+        state = rglru_state(B, R, cw)
+    # causal depthwise temporal conv (width cw)
+    upad = jnp.concatenate([state["conv"], u], axis=1)  # (B, S+cw-1, R)
+    uc = sum(upad[:, i:i + S] * p["conv"][i] for i in range(cw))
+    new_conv = upad[:, -(cw - 1):] if cw > 1 else state["conv"]
+
+    rx = jax.nn.sigmoid(qdot(x, p["w_gate_x"], qcfg))   # input gate
+    ra = jax.nn.sigmoid(qdot(x, p["w_gate_a"], qcfg))   # recurrence gate
+    c_softplus = jax.nn.softplus(p["a_param"])          # >0
+    log_a = -8.0 * ra * c_softplus                      # (B,S,R), <0
+    a = jnp.exp(log_a)
+    gated = rx * uc
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    v = beta * gated
+
+    # linear recurrence h_t = a_t h_{t-1} + v_t via associative scan
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    aT = a.transpose(1, 0, 2)
+    vT = v.transpose(1, 0, 2)
+    # fold initial state into the first element
+    vT = vT.at[0].add(aT[0] * state["h"])
+    a_sc, h_sc = jax.lax.associative_scan(comb, (aT, vT), axis=0)
+    h = h_sc.transpose(1, 0, 2)                         # (B,S,R)
+    final = {"h": h[:, -1], "conv": new_conv}
+    y = qdot(h, p["w_out"], qcfg)
+    return y, final

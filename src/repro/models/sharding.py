@@ -1,0 +1,106 @@
+"""Logical sharding annotations for model internals.
+
+Models call ``constrain(x, ..., axes)`` with *logical* axis names; the
+launcher activates a mapping from logical names to mesh axes.  When no
+mesh is active (unit tests, CPU smoke runs) the call is a no-op, so the
+same model code serves 1-device tests and the 512-chip dry-run.
+
+Logical axes:
+  "batch"   -> ("pod", "data")   (pod axis also folds into data for DP)
+  "seq"     -> None (replicated) or "data" for sequence parallelism
+  "heads"/"ffn"/"vocab"/"experts"/"kv" -> "model" (tensor/expert parallel)
+  "layers"  -> "pod" when pipeline-style layer sharding is active
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Optional[Tuple[str, ...]]]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Dict[str, Optional[Tuple[str, ...]]],
+                       axis_sizes: Optional[Dict[str, int]] = None):
+    """Activate logical->mesh axis mapping (launcher only).
+
+    axis_sizes: mesh axis name -> size; when provided, constraints on
+    dims not divisible by the mapped axes are dropped (lets e.g. 8
+    experts stay replicated on a 16-wide model axis)."""
+    prev = (_rules(), getattr(_state, "sizes", None))
+    _state.rules = rules
+    _state.sizes = axis_sizes
+    try:
+        yield
+    finally:
+        _state.rules, _state.sizes = prev
+
+
+# Default production mapping (see launch/mesh.py).
+PRODUCTION_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks shards its seq axis over "model"; attention/mixing gathers.
+    "seq_shard": ("model",),
+    "heads": ("model",),
+    "kv": None,                  # kv heads usually < model-axis size
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("data",),
+    "embed": None,
+    "layers": None,
+}
+
+SINGLE_POD_RULES = dict(PRODUCTION_RULES, batch=("data",))
+
+
+@contextlib.contextmanager
+def remat_scope(on: bool = True):
+    """Per-layer rematerialization: while active (at trace time), every
+    layer-scan body in the decoder stack is wrapped in jax.checkpoint."""
+    prev = getattr(_state, "remat", False)
+    _state.remat = on
+    try:
+        yield
+    finally:
+        _state.remat = prev
+
+
+def remat_active() -> bool:
+    return getattr(_state, "remat", False)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op w/o rules.
+
+    Constraints on dims not divisible by the mapped mesh axes are
+    dropped (see logical_axis_rules)."""
+    rules = _rules()
+    if rules is None:
+        return x
+    sizes = getattr(_state, "sizes", None)
+    spec = []
+    for dim, ax in zip(x.shape, logical_axes):
+        m = rules.get(ax) if ax is not None else None
+        if not m:
+            spec.append(None)
+            continue
+        if sizes is not None:
+            total = 1
+            for a in m:
+                total *= sizes.get(a, 1)
+            if total <= 1 or dim % total != 0:
+                spec.append(None)
+                continue
+        spec.append(m[0] if len(m) == 1 else tuple(m))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,5 @@
+from .quantize import QuantConfig, quantize_uint8, dequantize, fake_quant
+from .linear import qdot, qeinsum_heads
+
+__all__ = ["QuantConfig", "quantize_uint8", "dequantize", "fake_quant",
+           "qdot", "qeinsum_heads"]

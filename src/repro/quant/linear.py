@@ -1,0 +1,76 @@
+"""Quantized linear ops routed through the approximate multiplier.
+
+``qdot(x, w, cfg)`` is THE integration point of the paper's technique:
+every dense projection in every architecture goes through it.  With
+cfg.design == 'exact' it is a plain fp matmul (the baseline); otherwise
+the uint8 zero-point decomposition sends the Q_x ⊗ Q_w term through the
+selected approximate-multiplier backend.
+
+Shardability: qdot is pure jnp/custom_vjp; under pjit the operand
+shardings propagate through quantize (elementwise), the LUT gather
+(batched take — replicated table), and the matmul terms, so the same
+code paths run on the 2x16x16 production mesh (verified by the dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .quantize import QuantConfig, quantize_uint8
+
+_MF_CACHE: dict = {}
+
+
+def _mean_field_tables(design: str):
+    """Conditional-mean error tables for bias compensation (float32).
+
+    Cached as numpy (never as traced/device values) so the cache is safe
+    to populate inside jit/scan tracing."""
+    if design not in _MF_CACHE:
+        from repro.core import lut as lutmod
+        import numpy as np
+        e = lutmod.error_table(design).astype(np.float64)
+        _MF_CACHE[design] = (e.mean(1).astype(np.float32),
+                             e.mean(0).astype(np.float32),
+                             float(e.mean()))
+    mu_r, mu_c, mu = _MF_CACHE[design]
+    return jnp.asarray(mu_r), jnp.asarray(mu_c), jnp.float32(mu)
+
+
+def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """y[..., n] = sum_k approx(x[..., k], w[k, n])  (dequantized float32).
+
+    x: (..., K) float; w: (K, N) float (master weights).
+    """
+    if not cfg.enabled:
+        return jnp.matmul(x, w)
+    qx, sx, zx = quantize_uint8(x)
+    qw, sw, zw = quantize_uint8(w)
+    K = x.shape[-1]
+    prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank)
+    prod = prod.astype(jnp.float32)
+    if cfg.compensate:
+        mu_r, mu_c, mu = _mean_field_tables(cfg.design)
+        comp = (jnp.take(mu_r, qx, axis=0).sum(-1, keepdims=True)
+                + jnp.take(mu_c, qw, axis=0).sum(0, keepdims=True)
+                - K * mu)
+        prod = prod - comp
+    rowsum = qx.sum(axis=-1, keepdims=True).astype(jnp.float32)    # (..., 1)
+    colsum = qw.sum(axis=0, keepdims=True).astype(jnp.float32)     # (1, N)
+    y = prod - zw * rowsum - zx * colsum + K * zx * zw
+    y = y * (sx * sw)
+    # STE: gradient flows as if y == x @ w  (exact fp product)
+    y_ste = jnp.matmul(x, w)
+    return y_ste + jax.lax.stop_gradient(y - y_ste)
+
+
+def qeinsum_heads(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Batched per-head projection: x (..., K) @ w (H, K, D) -> (..., H, D).
+
+    Implemented as a single qdot against w reshaped to (K, H*D) so the
+    approximate product is applied uniformly.
+    """
+    H, K, D = w.shape
+    y = qdot(x, w.transpose(1, 0, 2).reshape(K, H * D), cfg)
+    return y.reshape(*x.shape[:-1], H, D)

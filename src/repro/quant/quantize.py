@@ -1,0 +1,81 @@
+"""uint8 asymmetric quantization for the approximate multiplier.
+
+The paper's multiplier is *unsigned* 8x8, so the natural quantized form
+is asymmetric uint8:   q = clip(round(x / s) + z, 0, 255).
+
+A quantized matmul then decomposes (standard zero-point algebra) as
+
+    y = s_x s_w [ Q_x ⊗ Q_w  -  z_w rowsum(Q_x)  -  z_x colsum(Q_w)
+                  + K z_x z_w ]
+
+where ONLY the Q_x ⊗ Q_w term runs through the approximate multiplier
+(the row/col sums are exact adder trees in hardware, no multipliers).
+This mirrors the paper's circuit exactly: every 8x8 scalar product is the
+approximate one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """How the approximate multiplier is applied inside matmuls.
+
+    design:  'exact' | 'design1' | 'design2' | 'initial' | competitor ids
+    backend: 'xla' (gather formulation, lowers everywhere — dry-run path)
+             'pallas' (LUT kernel), 'residual' (rank-r fast emulation),
+             'exact' (bypass; fp baseline uses design='exact' as well)
+    rank:    correction rank for the 'residual' backend
+    compensate: beyond-paper mean-field bias compensation.  The paper's
+        multipliers have one-directional error (E[e] = -353/-410), which
+        is benign for the sharpening kernel's small operands but biases
+        deep matmul accumulations.  Compensation subtracts the separable
+        conditional means  mu_r[a] + mu_c[b] - mu  (two 256-entry tables
+        + broadcast adds, no extra multipliers), cutting matmul-level
+        relative error ~12x (measured; EXPERIMENTS.md §Perf).  Set False
+        for the paper-faithful circuit.
+    """
+    design: str = "design2"
+    backend: str = "xla"
+    rank: int = 32
+    compensate: bool = True
+    # The unembed/logits matmul stays exact by default: emulating the
+    # approximate multiplier against a 256k vocab dominates activation
+    # memory (measured +273 GiB/dev on nemotron — §Perf A3) and real
+    # quantized deployments keep the logits layer high-precision.
+    quant_unembed: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.design != "exact"
+
+
+def _minmax_scale(x, axis=None, eps=1e-8):
+    lo = jax.lax.stop_gradient(jnp.min(x, axis=axis, keepdims=axis is not None))
+    hi = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=axis is not None))
+    scale = jnp.maximum((hi - lo) / 255.0, eps)
+    zp = jnp.clip(jnp.round(-lo / scale), 0, 255)
+    return scale, zp
+
+
+def quantize_uint8(x, axis=None):
+    """Returns (q, scale, zp): q integer-valued in [0,255] (int32 dtype)."""
+    scale, zp = _minmax_scale(x, axis)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0, 255)
+    return q.astype(jnp.int32), scale, zp
+
+
+def dequantize(q, scale, zp):
+    return (q.astype(jnp.float32) - zp) * scale
+
+
+def fake_quant(x, axis=None):
+    """Straight-through fake-quantization (QAT)."""
+    q, s, z = quantize_uint8(x, axis)
+    xq = dequantize(q, s, z)
+    return x + jax.lax.stop_gradient(xq - x)

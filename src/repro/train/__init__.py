@@ -1,0 +1,6 @@
+from . import checkpoint, optimizer, step  # noqa: F401
+from .optimizer import OptConfig
+from .step import make_train_step, make_serve_step, make_prefill_step
+
+__all__ = ["checkpoint", "optimizer", "step", "OptConfig",
+           "make_train_step", "make_serve_step", "make_prefill_step"]

@@ -1,0 +1,79 @@
+"""Unit tests: compressor truth tables vs the paper (Table 1, Table 6)."""
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+
+# Paper Appendix I (Table 6) NED values, exact to the printed precision.
+PAPER_NED = {
+    "3,3:2": 0.08125,
+    "2,2:2": 0.07143,
+    "3,3:2-nocin": 0.0555,
+    "3,2:2-nocin": 0.03125,
+    "2,3:2": 0.10156,
+    "1,3:2": 0.13542,
+    "1,2:2": 0.1,
+    "1,2:2-nocin": 0.0625,
+}
+
+
+@pytest.mark.parametrize("name,want", sorted(PAPER_NED.items()))
+def test_ned_matches_paper(name, want):
+    got = C.compressor_stats(name)["NED_C"]
+    assert abs(got - want) < 5e-4, (name, got, want)
+
+
+def test_332_truth_table_structure():
+    """Paper Table 1: 128 rows, 48 erroneous, ED in {0,-2,-4}."""
+    tt = C.truth_table("3,3:2")
+    ed = tt[:, -1]
+    assert len(tt) == 128
+    assert int((ed != 0).sum()) == 48
+    assert set(np.unique(ed)) <= {-4, -2, 0}
+
+
+def test_332_specific_rows():
+    """Spot-check rows printed in Table 1 (sigma-in groupings)."""
+    # (b1,b2,b3 sum, a sum, cin) -> (cout, carry, sum)
+    import itertools
+    fn = C.compressor_332
+    def out_for(sb, sa, cin):
+        a = [1] * sa + [0] * (3 - sa)
+        b = [1] * sb + [0] * (3 - sb)
+        s, c, co = fn(*[np.asarray(v) for v in a],
+                      *[np.asarray(v) for v in b], np.asarray(cin))
+        return int(co), int(c), int(s)
+    assert out_for(0, 0, 0) == (0, 0, 0)
+    assert out_for(2, 0, 0) == (1, 0, 0)          # sigma=4 exact row
+    assert out_for(1, 3, 1) == (0, 1, 0)          # sigma=6, ED=-4
+    assert out_for(3, 3, 1) == (1, 1, 0)          # sigma=10, ED=-4
+    assert out_for(2, 2, 1) == (1, 1, 1)          # sigma=7 exact
+
+
+def test_exact_cells_identities():
+    for p in range(4):
+        a, b = (p >> 1) & 1, p & 1
+        s, c = C.half_adder(np.asarray(a), np.asarray(b))
+        assert a + b == int(s) + 2 * int(c)
+    for p in range(8):
+        x = [(p >> i) & 1 for i in range(3)]
+        s, c = C.full_adder(*[np.asarray(v) for v in x])
+        assert sum(x) == int(s) + 2 * int(c)
+    for p in range(32):
+        x = [(p >> i) & 1 for i in range(5)]
+        s, cr, co = C.compressor_42_exact(*[np.asarray(v) for v in x])
+        assert sum(x) == int(s) + 2 * (int(cr) + int(co))
+    for p in range(256):
+        x = [(p >> i) & 1 for i in range(8)]
+        s, c, c1, c2, c3 = C.compressor_62_exact(*[np.asarray(v) for v in x])
+        assert sum(x) == int(s) + 2 * (int(c) + int(c1) + int(c2)) \
+            + 4 * int(c3)
+
+
+def test_all_inexact_errors_one_directional():
+    """Every proposed compressor only under-approximates (ED <= 0 in the
+    paper's sign convention), the property the mean-field compensation
+    and the image-sharpening analysis both rely on."""
+    for name in C.SPECS:
+        tt = C.truth_table(name)
+        assert (tt[:, -1] <= 0).all(), name

@@ -1,0 +1,89 @@
+"""Multiplier-level tests: exactness of baselines, error stats vs Table 4,
+truncation sweep monotonicity (Fig. 11), structural invariants."""
+import numpy as np
+import pytest
+
+from repro.core import lut, metrics, multipliers as M
+
+
+@pytest.fixture(scope="module")
+def exact_table():
+    a = np.arange(256, dtype=np.int64)
+    return a[:, None] * a[None, :]
+
+
+def test_dadda_is_exact(exact_table):
+    assert np.array_equal(M.exhaustive_products(M.mult_dadda), exact_table)
+
+
+def test_design1_stats_vs_paper():
+    """Paper Table 4: MED 297.9, NED 4.58e-3, ER 66.9%.  Our figure-level
+    reconstruction (see multipliers.py docstring) reproduces ER/NED to a
+    few percent; MED within ~20% (the dot diagrams under-determine the
+    netlist).  Bounds here lock the reconstruction against regressions."""
+    s = metrics.multiplier_stats(M.mult_design1)
+    assert 280 < s["MED"] < 380, s
+    assert 0.60 < s["ER"] < 0.72, s
+    assert 4.0e-3 < s["NED"] < 6.0e-3, s
+
+
+def test_design2_stats_vs_paper():
+    """Paper Table 4: MED 409.7, NED 6.30e-3, ER 94.5% — reproduced to
+    ~1.5% by the reconstruction."""
+    s = metrics.multiplier_stats(M.mult_design2)
+    assert abs(s["MED"] - 409.7) / 409.7 < 0.05, s
+    assert abs(s["ER"] - 0.945) < 0.02, s
+    assert abs(s["NED"] - 6.30e-3) / 6.30e-3 < 0.05, s
+
+
+def test_design2_truncates_low_columns():
+    """F5..F0 = 0 for Design #2 (6 truncated columns)."""
+    prod = M.exhaustive_products(M.mult_design2)
+    assert (prod & 0b111111 == 0).all()
+
+
+def test_truncation_sweep_monotone():
+    """Fig. 11: MED increases with the number of truncated columns."""
+    meds = [metrics.multiplier_stats(M.MULTIPLIERS[f"design1_trunc{t}"])["MED"]
+            for t in range(1, 8)]
+    assert all(m2 >= m1 * 0.999 for m1, m2 in zip(meds, meds[1:])), meds
+
+
+def test_initial_design_msb_dropped():
+    """Fig. 7 initial design: F15 structurally 0."""
+    prod = M.exhaustive_products(M.mult_initial)
+    assert (prod < 2 ** 15).all()
+
+
+def test_errors_one_directional(exact_table):
+    """approx <= exact everywhere for the proposed designs."""
+    for name in ("initial", "design1", "design2"):
+        prod = M.exhaustive_products(M.MULTIPLIERS[name])
+        assert (prod <= exact_table).all(), name
+
+
+def test_design_error_light_on_small_operands():
+    """Fig. 13 analysis: the proposed designs err *less* on the small-
+    operand border (why they work for image sharpening), unlike [14,15]."""
+    r1 = metrics.border_error_ratio(M.mult_design1)
+    assert r1 < 0.6, r1
+    r15 = metrics.border_error_ratio(M.COMPETITORS["momeni15"])
+    assert r15 > r1, (r15, r1)
+
+
+def test_lut_matches_gate_sim():
+    """LUT layer == gate-level simulation on all 65536 pairs."""
+    for name in ("design1", "design2"):
+        want = M.exhaustive_products(M.MULTIPLIERS[name])
+        got = lut.build_lut(name)
+        assert np.array_equal(got, want), name
+
+
+def test_stage_count_is_two():
+    """The paper's headline structural claim: partial products reach the
+    final result in exactly TWO stages.  Our dataflow encodes stage 1 as
+    one compressor level (no intra-stage data dependencies between cells
+    except the designed cout/held chains) and stage 2 as cells + adder."""
+    from repro.core.cost import multiplier_cost
+    c = multiplier_cost(M.DESIGN1_STAGE1, M.DESIGN1_CELL_PAIRS, 10)
+    assert c["stages"] == 2

@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C, lut, multipliers as M
+
+u8 = st.integers(min_value=0, max_value=255)
+
+
+@settings(max_examples=200, deadline=None)
+@given(u8, u8)
+def test_approx_bounded_error(a, b):
+    """|approx - exact| <= max observed ED; approx <= exact."""
+    for name in ("design1", "design2"):
+        t = lut.build_lut(name)
+        e = int(t[a, b]) - a * b
+        assert -3800 <= e <= 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(u8, u8)
+def test_zero_annihilates_design1(a, b):
+    """x*0 has bounded error even under approximation; exact for the
+    un-truncated design when either operand is 0 (all pps are 0)."""
+    t = lut.build_lut("design1")
+    assert int(t[a, 0]) == 0
+    assert int(t[0, b]) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=7, max_size=7))
+def test_332_matches_table_semantics(bits):
+    """3,3:2 output value == Table-1 row for its input pattern."""
+    a1, a2, a3, b1, b2, b3, cin = [np.asarray(v) for v in bits]
+    s, c, co = C.compressor_332(a1, a2, a3, b1, b2, b3, cin)
+    tt = C.truth_table("3,3:2")
+    idx = sum(v << i for i, v in enumerate(bits))
+    row = tt[idx]
+    assert (int(s), int(c), int(co)) == tuple(row[7:10])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 6))
+def test_truncation_only_loses_low_bits(a, b, t):
+    """design1_trunc{t} never exceeds design1 and differs from it by less
+    than the truncated-column mass bound Σ_{k<t} h_k 2^k ... conservatively
+    2^{t+3} (heights <= 8)."""
+    t = max(t, 1)
+    full = int(lut.build_lut("design1")[a, b])
+    trunc = int(lut.build_lut(f"design1_trunc{t}")[a, b])
+    # truncation alters mid-column compressor inputs too (couts vanish),
+    # so bound by truncated mass + max compressor ED drift
+    assert trunc <= full + 4096
+    assert full - trunc <= 8 * (2 ** t) + 4096
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_qdot_exact_backend_matches_matmul(m, k, n, seed):
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, qdot
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    y = qdot(x, w, QuantConfig(design="exact"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bounded(seed):
+    import jax.numpy as jnp
+    from repro.quant.quantize import dequantize, quantize_uint8
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(32,)).astype(np.float32) * rng.uniform(0.1, 10)
+    q, s, z = quantize_uint8(jnp.asarray(x))
+    back = np.asarray(dequantize(q, s, z))
+    assert np.abs(back - x).max() <= float(np.asarray(s)) * 0.51
