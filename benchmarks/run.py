@@ -57,20 +57,82 @@ def kernel_microbench():
     return rows
 
 
-def main() -> None:
-    from . import tables
+def qdot_mode_bench():
+    """Signed symmetric int8 vs uint8 zero-point-decomposed qdot hot
+    path: same design/backend, the sym_i8 path drops the zero-point
+    cross-term matmuls (wall time + accuracy side by side)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.quant import QuantConfig, qdot
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    ref_y = x @ w
+    rows = []
+    # mode has no effect on the disabled (exact) baseline: bench it once
+    cases = [("asym_u8", "design2", "xla"),
+             ("asym_u8", "design2", "residual_xla"),
+             ("sym_i8", "design2", "xla"),
+             ("sym_i8", "design2", "residual_xla"),
+             ("asym_u8", "exact", "exact")]
+    for mode, design, backend in cases:
+        cfg = QuantConfig(design=design, backend=backend, mode=mode)
+        fn = jax.jit(lambda x, w, c=cfg: qdot(x, w, c))
+        y = fn(x, w)  # compile
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(x, w))
+        us = (time.perf_counter() - t0) / n * 1e6
+        rel = float(jnp.abs(y - ref_y).mean() / jnp.abs(ref_y).mean())
+        rows.append({"mode": mode, "design": design, "backend": backend,
+                     "us_per_call": round(us, 1),
+                     "rel_err": round(rel, 4),
+                     "shape": "128x256x128"})
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    if __package__:
+        from . import tables
+    else:  # `python benchmarks/run.py`: sys.path[0] is benchmarks/
+        import tables
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of table names to run "
+                         "(also matches 'kernel_microbench'/'qdot_modes'); "
+                         "default runs everything")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        known = set(tables.ALL) | {"kernel_microbench", "qdot_modes"}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown benchmark name(s) {sorted(unknown)}; "
+                     f"choose from {sorted(known)}")
+
+    def wanted(name):
+        return only is None or name in only
+
     t_all = time.perf_counter()
     summary = []
     for name, fn in tables.ALL.items():
+        if not wanted(name):
+            continue
         t0 = time.perf_counter()
         rows = fn()
         dt = (time.perf_counter() - t0) * 1e6
         print(f"### {name}")
         print(_csv(rows))
         summary.append((name, dt, len(rows)))
-    print("### kernel_microbench")
-    rows = kernel_microbench()
-    print(_csv(rows))
+    for name, fn in (("kernel_microbench", kernel_microbench),
+                     ("qdot_modes", qdot_mode_bench)):
+        if wanted(name):
+            print(f"### {name}")
+            print(_csv(fn()))
 
     print("### summary  (name,us_per_call,derived)")
     for name, dt, n in summary:

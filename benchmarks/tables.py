@@ -168,6 +168,59 @@ def table5_sharpening() -> List[Dict]:
     return rows
 
 
+def table_signed_multipliers() -> List[Dict]:
+    """Beyond-paper: error stats of the signed int8 derivations
+    (repro.signed) — sign-magnitude wrappers + the sign-focused BW
+    reduction — over the exhaustive 65,536-pair signed sweep."""
+    from repro.signed import multipliers as SM
+    rows = []
+    for name in SM.SIGNED_MULTIPLIERS:
+        s = SM.signed_multiplier_stats(name)
+        rows.append({"multiplier": name, "MED": round(s["MED"], 1),
+                     "NMED_e-3": round(s["NMED"] * 1e3, 3),
+                     "ER_%": round(s["ER"] * 100, 1),
+                     "maxED": s["max_ED"],
+                     "mean_signed": round(s["mean_signed"], 1)})
+    return rows
+
+
+def table_recompose16() -> List[Dict]:
+    """Beyond-paper: 16x16 multipliers recomposed from four 8x8 blocks
+    with per-block design assignment (sampled sweep; the exact-design
+    recompositions are bit-exact, asserted in tests)."""
+    from repro.signed import recompose as RC
+    rows = []
+    for name, spec in RC.RECOMPOSED.items():
+        s = RC.sampled_stats(name, n=1 << 14)
+        rows.append({"multiplier": name,
+                     "blocks": "/".join(spec.blocks.values()),
+                     "signed": spec.signed,
+                     "MED": round(s["MED"], 1),
+                     "NMED_e-6": round(s["NMED"] * 1e6, 3),
+                     "ER_%": round(s["ER"] * 100, 1)})
+    return rows
+
+
+def table_edge_detection() -> List[Dict]:
+    """Beyond-paper: Sobel edge detection through the signed multipliers
+    (the headline application of the sign-focused-compressor work).
+    Sign-magnitude design1 is exact here — with Sobel coefficients <= 2
+    its inexact cells never see enough populated columns to err (the
+    paper's small-operand border effect).  The truncated variants
+    (design2 & co) drop exactly the low columns such small products live
+    in, and the BW variant's constant bias dominates — both degrade."""
+    from repro.app import edge_detection as ed
+    from repro.app.sharpening import make_test_images
+    imgs = make_test_images()
+    rows = []
+    for name in ("design1", "design2", "design1_trunc4", "bw_design1"):
+        s = ed.evaluate(name, imgs)
+        rows.append({"multiplier": name,
+                     "edge_F1": round(s["edge_F1"], 4),
+                     "grad_PSNR": round(s["grad_PSNR"], 2)})
+    return rows
+
+
 ALL = {
     "table1_truth_table": table1_truth_table,
     "table2_compressors": table2_compressors,
@@ -177,4 +230,7 @@ ALL = {
     "fig9_pdaep": fig9_pdaep,
     "fig11_truncation": fig11_truncation,
     "fig13_heatmaps": fig13_heatmaps,
+    "table_signed_multipliers": table_signed_multipliers,
+    "table_recompose16": table_recompose16,
+    "table_edge_detection": table_edge_detection,
 }

@@ -38,3 +38,19 @@ a = jnp.asarray(np.random.default_rng(2).integers(0, 256, (128, 128)))
 b = jnp.asarray(np.random.default_rng(3).integers(0, 256, (128, 128)))
 s = lut_matmul(a, b, jnp.asarray(ops.get_lut("design2")))
 print("Pallas LUT-matmul output:", s.shape, s.dtype)
+
+# 6. Beyond-paper: the signed subsystem — symmetric int8 quantization
+# straight through the signed multiplier (no zero-point cross terms)
+from repro.signed import SIGNED_MULTIPLIERS
+print("design2 signed: -100 x 77 =",
+      int(np.asarray(SIGNED_MULTIPLIERS["design2"](-100, 77))),
+      "(exact:", -100 * 77, ")")
+y_sym = qdot(x, w, QuantConfig(design="design2", mode="sym_i8"))
+rel_sym = float(jnp.abs(y_sym - y_ref).mean() / jnp.abs(y_ref).mean())
+print(f"symmetric-signed quantized matmul rel err: {rel_sym:.3f}")
+
+# 7. Beyond-paper: 16x16 recomposed from four 8x8 blocks
+from repro.signed import RECOMPOSED
+spec = RECOMPOSED["s16_hh_exact"]
+print("16x16 (exact HH + design2 low blocks): -12345 x 6789 =",
+      int(np.asarray(spec(-12345, 6789))), "(exact:", -12345 * 6789, ")")

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml: tier-1 verify + benchmark smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== benchmark CSV smoke =="
+python -m benchmarks.run --only table4_approx,table_signed_multipliers,qdot_modes
+
+echo "== quickstart =="
+python examples/quickstart.py
+
+echo "OK"

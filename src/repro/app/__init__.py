@@ -1,1 +1,1 @@
-from . import sharpening  # noqa: F401
+from . import edge_detection, sharpening  # noqa: F401

@@ -39,16 +39,53 @@ def build_lut(name: str) -> np.ndarray:
 
 
 @lru_cache(maxsize=None)
+def build_signed_lut(name: str) -> np.ndarray:
+    """(256,256) int32 signed product table, indexed [a+128, b+128].
+
+    Offset-shifted indexing: table[i, j] = design(i-128, j-128) for the
+    registered signed multiplier (repro.signed.SIGNED_MULTIPLIERS), so
+    int8 operands index after a +128 shift (what the kernels do).
+    """
+    from repro.signed.multipliers import (SIGNED_MULTIPLIERS,
+                                          exhaustive_signed_products)
+    if name not in SIGNED_MULTIPLIERS:
+        raise ValueError(
+            f"no signed variant of design {name!r}; registered signed "
+            f"designs: {sorted(SIGNED_MULTIPLIERS)}")
+    return exhaustive_signed_products(SIGNED_MULTIPLIERS[name]).astype(
+        np.int32)
+
+
+@lru_cache(maxsize=None)
 def error_table(name: str) -> np.ndarray:
     """(256,256) int32  e(a,b) = approx(a,b) - a*b."""
     exact = np.arange(256, dtype=np.int64)[:, None] * np.arange(256)[None, :]
     return (build_lut(name).astype(np.int64) - exact).astype(np.int32)
 
 
+@lru_cache(maxsize=None)
+def signed_error_table(name: str) -> np.ndarray:
+    """(256,256) int32  e(a,b) = approx(a,b) - a*b, indexed [a+128, b+128]."""
+    r = np.arange(-128, 128, dtype=np.int64)
+    exact = r[:, None] * r[None, :]
+    return (build_signed_lut(name).astype(np.int64) - exact).astype(np.int32)
+
+
 def exact_rank(name: str) -> int:
     """Exact linear-algebra rank of the error surface over the rationals."""
     e = error_table(name).astype(np.float64)
     return int(np.linalg.matrix_rank(e, tol=1e-6))
+
+
+def _svd_factors(e: np.ndarray, rank: int | None
+                 ) -> Tuple[np.ndarray, np.ndarray, float]:
+    u, s, vt = np.linalg.svd(e, full_matrices=False)
+    if rank is None:
+        rank = int((s > s[0] * 1e-12).sum()) if s[0] > 0 else 0
+    F = u[:, :rank] * s[:rank]
+    G = vt[:rank, :]
+    resid = float(np.abs(F @ G - e).max()) if rank else float(np.abs(e).max())
+    return F.astype(np.float32), G.astype(np.float32), resid
 
 
 @lru_cache(maxsize=None)
@@ -61,14 +98,15 @@ def error_factors(name: str, rank: int | None = None,
     ~1e-9 * scale); tests assert the reconstruction is integer-exact after
     rounding.
     """
-    e = error_table(name).astype(np.float64)
-    u, s, vt = np.linalg.svd(e, full_matrices=False)
-    if rank is None:
-        rank = int((s > s[0] * 1e-12).sum()) if s[0] > 0 else 0
-    F = u[:, :rank] * s[:rank]
-    G = vt[:rank, :]
-    resid = float(np.abs(F @ G - e).max()) if rank else float(np.abs(e).max())
-    return F.astype(np.float32), G.astype(np.float32), resid
+    return _svd_factors(error_table(name).astype(np.float64), rank)
+
+
+@lru_cache(maxsize=None)
+def signed_error_factors(name: str, rank: int | None = None,
+                         ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """SVD factors of the SIGNED error surface; rows/cols indexed by the
+    offset-shifted operand (a+128), matching build_signed_lut."""
+    return _svd_factors(signed_error_table(name).astype(np.float64), rank)
 
 
 def rank_profile(name: str, tol_meds=(0.0, 0.5, 2.0, 8.0)) -> Dict[str, object]:

@@ -91,7 +91,8 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
 # Kernel B: exact MXU matmul + rank-r error correction (beyond-paper)
 # ---------------------------------------------------------------------------
 
-def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, n_k: int):
+def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, n_k: int,
+                     offset: int = 0):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -106,22 +107,29 @@ def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, n_k: int):
     # exact product on the MXU
     exact = jax.lax.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                         precision=jax.lax.Precision.HIGHEST)
-    # rank-r correction, also MXU: (TM, TK*r) @ (TK*r, TN)
+    # rank-r correction, also MXU: (TM, TK*r) @ (TK*r, TN).  The gathers
+    # index the (offset-shifted) operand value; `offset=128` selects the
+    # signed factor tables (core.lut.signed_error_factors).
     r = F.shape[1]
     tm, tk = a.shape
     tn = b.shape[1]
-    Fa = jnp.take(F, a.reshape(-1), axis=0).reshape(tm, tk * r)
-    Gb = jnp.take(G, b.reshape(-1), axis=1)        # (r, TK*TN)
+    Fa = jnp.take(F, (a + offset).reshape(-1), axis=0).reshape(tm, tk * r)
+    Gb = jnp.take(G, (b + offset).reshape(-1), axis=1)     # (r, TK*TN)
     Gb = Gb.reshape(r, tk, tn).transpose(1, 0, 2).reshape(tk * r, tn)
     corr = jax.lax.dot(Fa, Gb, precision=jax.lax.Precision.HIGHEST)
     out_ref[...] += exact + corr
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "offset"))
 def residual_matmul(a: jax.Array, b: jax.Array, F: jax.Array, G: jax.Array,
                     block: Tuple[int, int, int] = (128, 128, 128),
-                    interpret: bool = True) -> jax.Array:
-    """Exact matmul + rank-r approximate-error correction (float32 out)."""
+                    interpret: bool = True, offset: int = 0) -> jax.Array:
+    """Exact matmul + rank-r approximate-error correction (float32 out).
+
+    ``offset`` shifts the factor-table gathers (128 for int8 operands
+    against signed factor tables); the exact MXU matmul always runs on
+    the raw operand values.
+    """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
@@ -131,7 +139,7 @@ def residual_matmul(a: jax.Array, b: jax.Array, F: jax.Array, G: jax.Array,
     r = F.shape[1]
     grid = (M // TM, N // TN, n_k)
     return pl.pallas_call(
-        functools.partial(_residual_kernel, n_k=n_k),
+        functools.partial(_residual_kernel, n_k=n_k, offset=offset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),

@@ -42,9 +42,22 @@ def get_lut(design: str) -> np.ndarray:
     return _LUT_CACHE[design]
 
 
-def get_factors(design: str, rank: int = 32):
+def get_signed_lut(design: str) -> np.ndarray:
+    """Signed product LUT indexed [a+128, b+128] for a registered signed
+    design (repro.signed.SIGNED_MULTIPLIERS; 'exact' = true product)."""
+    key = ("signed", design)
+    if key not in _LUT_CACHE:
+        from repro.core import lut as lutmod
+        _LUT_CACHE[key] = lutmod.build_signed_lut(design)
+    return _LUT_CACHE[key]
+
+
+def get_factors(design: str, rank: int = 32, signed: bool = False):
     from repro.core import lut as lutmod
-    F, G, _ = lutmod.error_factors(design, rank)
+    if signed:
+        F, G, _ = lutmod.signed_error_factors(design, rank)
+    else:
+        F, G, _ = lutmod.error_factors(design, rank)
     return F, G
 
 
@@ -52,38 +65,49 @@ def get_factors(design: str, rank: int = 32):
 # STE-wrapped approximate matmul
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def approx_matmul(a: jax.Array, b: jax.Array, design: str = "design2",
-                  backend: str = "xla", rank: int = 32) -> jax.Array:
-    """S = A ⊗_approx B over uint8-valued int arrays. int32/float32 out.
+                  backend: str = "xla", rank: int = 32,
+                  signed: bool = False) -> jax.Array:
+    """S = A ⊗_approx B over int arrays. int32/float32 out.
 
     a: (..., M, K), b: (K, N). Batched over leading dims of `a`.
+    Operands are uint8-valued ([0,255]) by default; with ``signed=True``
+    they are int8-valued ([-128,127]) and the product routes through the
+    signed multiplier registry (repro.signed) via offset-shifted LUTs.
     """
-    return _approx_matmul_fwd_impl(a, b, design, backend, rank)
+    return _approx_matmul_fwd_impl(a, b, design, backend, rank, signed)
 
 
-def _approx_matmul_fwd_impl(a, b, design, backend, rank):
+def _approx_matmul_fwd_impl(a, b, design, backend, rank, signed=False):
     lead = a.shape[:-2]
     M = int(np.prod(lead)) * a.shape[-2] if lead else a.shape[-2]
     a2 = a.reshape(M, a.shape[-1])
+    off = 128 if signed else 0
+    lut = (lambda: get_signed_lut(design)) if signed \
+        else (lambda: get_lut(design))
     if backend == "exact":
         out = ref.exact_matmul_ref(a2, b)
     elif backend == "xla":
         # Faithful gather formulation. NB: materializes the (M,K,N) index
         # surface unless XLA fuses it — fine at test/benchmark scale, use
         # 'residual_xla' for the big-model graphs (see DESIGN.md §Perf).
-        out = ref.approx_matmul_ref(a2, b, get_lut(design))
+        out = ref.approx_matmul_ref(a2, b, lut(), offset=off)
     elif backend == "pallas":
-        out = lut_matmul(a2, b, jnp.asarray(get_lut(design)))
+        # The LUT kernel is offset-free: int8 operands are pre-shifted to
+        # the [0,255] index domain of the signed table.
+        out = lut_matmul(a2.astype(jnp.int32) + off,
+                         b.astype(jnp.int32) + off, jnp.asarray(lut()))
     elif backend == "residual":
-        F, G = get_factors(design, rank)
-        out = residual_matmul(a2, b, jnp.asarray(F), jnp.asarray(G))
+        F, G = get_factors(design, rank, signed)
+        out = residual_matmul(a2, b, jnp.asarray(F), jnp.asarray(G),
+                              offset=off)
     elif backend == "residual_xla":
         # Pure-XLA rank-r emulation: exact MXU matmul + einsum correction.
         # This is what the production-mesh graphs lower with.
-        F, G = get_factors(design, rank)
+        F, G = get_factors(design, rank, signed)
         out = ref.residual_corrected_matmul_ref(a2, b, jnp.asarray(F),
-                                                jnp.asarray(G))
+                                                jnp.asarray(G), offset=off)
     else:
         raise ValueError(backend)
     # float32 output so the STE custom_vjp has a nontrivial tangent space
@@ -93,11 +117,11 @@ def _approx_matmul_fwd_impl(a, b, design, backend, rank):
     return out.reshape(*lead, a.shape[-2], b.shape[-1])
 
 
-def _approx_matmul_fwd(a, b, design, backend, rank):
-    return _approx_matmul_fwd_impl(a, b, design, backend, rank), (a, b)
+def _approx_matmul_fwd(a, b, design, backend, rank, signed):
+    return _approx_matmul_fwd_impl(a, b, design, backend, rank, signed), (a, b)
 
 
-def _approx_matmul_bwd(design, backend, rank, res, g):
+def _approx_matmul_bwd(design, backend, rank, signed, res, g):
     a, b = res
     g = g.astype(jnp.float32)
     af = a.astype(jnp.float32)
@@ -113,6 +137,9 @@ def _approx_matmul_bwd(design, backend, rank, res, g):
 approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
 
 
-def approx_mul(a: jax.Array, b: jax.Array, design: str = "design2") -> jax.Array:
-    """Elementwise approximate product (used by the image pipeline)."""
+def approx_mul(a: jax.Array, b: jax.Array, design: str = "design2",
+               signed: bool = False) -> jax.Array:
+    """Elementwise approximate product (used by the image pipelines)."""
+    if signed:
+        return ref.approx_mul_ref(a, b, get_signed_lut(design), offset=128)
     return ref.approx_mul_ref(a, b, get_lut(design))

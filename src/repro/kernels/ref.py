@@ -1,8 +1,10 @@
 """Pure-jnp oracles for the approximate-multiply kernels.
 
 These are the semantic ground truth the Pallas kernels are validated
-against (tests sweep shapes/dtypes and assert_allclose).  All operate on
-unsigned-8-bit operand semantics: inputs are integer arrays in [0, 255].
+against (tests sweep shapes/dtypes and assert_allclose).  Operands are
+uint8-valued ([0, 255], offset=0, the paper's unsigned semantics) or
+int8-valued ([-128, 127], offset=128) — ``offset`` shifts the LUT index
+so signed tables built by core.lut.build_signed_lut resolve directly.
 """
 from __future__ import annotations
 
@@ -10,25 +12,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def approx_mul_ref(a, b, lut: np.ndarray):
+def approx_mul_ref(a, b, lut: np.ndarray, offset: int = 0):
     """Elementwise approximate product via the 256x256 LUT.
 
-    a, b: integer arrays (broadcastable) in [0,255]. Returns int32.
+    a, b: integer arrays (broadcastable); index = value + offset must
+    land in [0, 255]. Returns int32.
     """
     lut = jnp.asarray(lut, dtype=jnp.int32)
     flat = lut.reshape(-1)
-    idx = a.astype(jnp.int32) * 256 + b.astype(jnp.int32)
+    idx = (a.astype(jnp.int32) + offset) * 256 + (b.astype(jnp.int32) + offset)
     return jnp.take(flat, idx, axis=0)
 
 
-def approx_matmul_ref(a, b, lut: np.ndarray):
-    """S[m,n] = sum_k LUT[a[m,k], b[k,n]]  (int32 accumulation).
+def approx_matmul_ref(a, b, lut: np.ndarray, offset: int = 0):
+    """S[m,n] = sum_k LUT[a[m,k]+offset, b[k,n]+offset]  (int32 acc).
 
-    a: (M,K) uint8-valued, b: (K,N) uint8-valued.
+    a: (M,K), b: (K,N); uint8-valued with offset=0, int8-valued with
+    offset=128 and a signed LUT.
     """
     lut = jnp.asarray(lut, dtype=jnp.int32)
     flat = lut.reshape(-1)
-    idx = a.astype(jnp.int32)[:, :, None] * 256 + b.astype(jnp.int32)[None, :, :]
+    idx = ((a.astype(jnp.int32) + offset)[:, :, None] * 256
+           + (b.astype(jnp.int32) + offset)[None, :, :])
     return jnp.take(flat, idx, axis=0).sum(axis=1)
 
 
@@ -38,15 +43,18 @@ def exact_matmul_ref(a, b):
                       preferred_element_type=jnp.int32)
 
 
-def residual_corrected_matmul_ref(a, b, F: np.ndarray, G: np.ndarray):
+def residual_corrected_matmul_ref(a, b, F: np.ndarray, G: np.ndarray,
+                                  offset: int = 0):
     """Beyond-paper fast path oracle: exact matmul + rank-r error model.
 
-    approx(a,b) ~= a*b + sum_r F[a,r] * G[r,b]; contraction distributes:
+    approx(a,b) ~= a*b + sum_r F[a+offset,r] * G[r,b+offset]; contraction
+    distributes:
        S = A@B + sum_r F_r(A) @ G_r(B)
-    F: (256, r) float32, G: (r, 256) float32 (from core.lut.error_factors).
+    F: (256, r) float32, G: (r, 256) float32 (core.lut.error_factors, or
+    signed_error_factors with offset=128 for int8 operands).
     """
     exact = exact_matmul_ref(a, b).astype(jnp.float32)
-    Fa = jnp.take(jnp.asarray(F), a.astype(jnp.int32), axis=0)  # (M,K,r)
-    Gb = jnp.take(jnp.asarray(G), b.astype(jnp.int32), axis=1)  # (r,K,N)
+    Fa = jnp.take(jnp.asarray(F), a.astype(jnp.int32) + offset, axis=0)
+    Gb = jnp.take(jnp.asarray(G), b.astype(jnp.int32) + offset, axis=1)
     corr = jnp.einsum("mkr,rkn->mn", Fa, Gb)
     return exact + corr

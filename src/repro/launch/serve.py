@@ -28,10 +28,16 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--design", default="design2")
     ap.add_argument("--backend", default="xla")
+    ap.add_argument("--quant-mode", default="asym_u8",
+                    choices=["asym_u8", "sym_i8"],
+                    help="asym_u8: unsigned multiplier + zero-point "
+                         "decomposition; sym_i8: symmetric int8 through "
+                         "the signed multiplier subsystem")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    qcfg = QuantConfig(design=args.design, backend=args.backend)
+    qcfg = QuantConfig(design=args.design, backend=args.backend,
+                       mode=args.quant_mode)
     B = args.requests
     s_max = args.prompt_len + args.gen_len
 
@@ -64,7 +70,7 @@ def main(argv=None):
     print(f"[serve] {B} requests, {args.gen_len} tokens each: "
           f"{dt:.2f}s total, {toks/dt:.1f} tok/s")
     print("[serve] sample output ids:", np.asarray(out[0])[:12].tolist())
-    return np.asarray(out)
+    return np.asarray(out), np.asarray(logits)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-from .quantize import QuantConfig, quantize_uint8, dequantize, fake_quant
+from .quantize import (QuantConfig, quantize_uint8, quantize_int8,
+                       dequantize, dequantize_int8, fake_quant)
 from .linear import qdot, qeinsum_heads
 
-__all__ = ["QuantConfig", "quantize_uint8", "dequantize", "fake_quant",
-           "qdot", "qeinsum_heads"]
+__all__ = ["QuantConfig", "quantize_uint8", "quantize_int8", "dequantize",
+           "dequantize_int8", "fake_quant", "qdot", "qeinsum_heads"]

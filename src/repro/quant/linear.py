@@ -17,24 +17,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from .quantize import QuantConfig, quantize_uint8
+from .quantize import QuantConfig, quantize_int8, quantize_uint8
 
 _MF_CACHE: dict = {}
 
 
-def _mean_field_tables(design: str):
+def _mean_field_tables(design: str, signed: bool = False):
     """Conditional-mean error tables for bias compensation (float32).
 
     Cached as numpy (never as traced/device values) so the cache is safe
-    to populate inside jit/scan tracing."""
-    if design not in _MF_CACHE:
+    to populate inside jit/scan tracing.  Signed tables are indexed by
+    the offset-shifted operand (q + 128)."""
+    key = (design, signed)
+    if key not in _MF_CACHE:
         from repro.core import lut as lutmod
         import numpy as np
-        e = lutmod.error_table(design).astype(np.float64)
-        _MF_CACHE[design] = (e.mean(1).astype(np.float32),
-                             e.mean(0).astype(np.float32),
-                             float(e.mean()))
-    mu_r, mu_c, mu = _MF_CACHE[design]
+        table = (lutmod.signed_error_table if signed
+                 else lutmod.error_table)
+        e = table(design).astype(np.float64)
+        _MF_CACHE[key] = (e.mean(1).astype(np.float32),
+                          e.mean(0).astype(np.float32),
+                          float(e.mean()))
+    mu_r, mu_c, mu = _MF_CACHE[key]
     return jnp.asarray(mu_r), jnp.asarray(mu_c), jnp.float32(mu)
 
 
@@ -45,6 +49,18 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     """
     if not cfg.enabled:
         return jnp.matmul(x, w)
+    if cfg.signed:
+        y = _qdot_signed(x, w, cfg)
+    else:
+        y = _qdot_asym(x, w, cfg)
+    # STE: gradient flows as if y == x @ w  (exact fp product)
+    y_ste = jnp.matmul(x, w)
+    return y_ste + jax.lax.stop_gradient(y - y_ste)
+
+
+def _qdot_asym(x, w, cfg):
+    """Paper-faithful uint8 path: zero-point decomposition around the
+    unsigned approximate product."""
     qx, sx, zx = quantize_uint8(x)
     qw, sw, zw = quantize_uint8(w)
     K = x.shape[-1]
@@ -59,10 +75,25 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     rowsum = qx.sum(axis=-1, keepdims=True).astype(jnp.float32)    # (..., 1)
     colsum = qw.sum(axis=0, keepdims=True).astype(jnp.float32)     # (1, N)
     y = prod - zw * rowsum - zx * colsum + K * zx * zw
-    y = y * (sx * sw)
-    # STE: gradient flows as if y == x @ w  (exact fp product)
-    y_ste = jnp.matmul(x, w)
-    return y_ste + jax.lax.stop_gradient(y - y_ste)
+    return y * (sx * sw)
+
+
+def _qdot_signed(x, w, cfg):
+    """Symmetric int8 hot path: Q_x ⊗_signed Q_w straight through the
+    signed backend — no zero-point cross-term matmuls."""
+    qx, sx = quantize_int8(x)
+    qw, sw = quantize_int8(w)
+    K = x.shape[-1]
+    prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank,
+                             True)
+    prod = prod.astype(jnp.float32)
+    if cfg.compensate:
+        mu_r, mu_c, mu = _mean_field_tables(cfg.design, signed=True)
+        comp = (jnp.take(mu_r, qx + 128, axis=0).sum(-1, keepdims=True)
+                + jnp.take(mu_c, qw + 128, axis=0).sum(0, keepdims=True)
+                - K * mu)
+        prod = prod - comp
+    return prod * (sx * sw)
 
 
 def qeinsum_heads(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:

@@ -1,6 +1,7 @@
-"""uint8 asymmetric quantization for the approximate multiplier.
+"""uint8 asymmetric + int8 symmetric quantization for the approximate
+multiplier.
 
-The paper's multiplier is *unsigned* 8x8, so the natural quantized form
+The paper's multiplier is *unsigned* 8x8, so its natural quantized form
 is asymmetric uint8:   q = clip(round(x / s) + z, 0, 255).
 
 A quantized matmul then decomposes (standard zero-point algebra) as
@@ -12,6 +13,14 @@ where ONLY the Q_x ⊗ Q_w term runs through the approximate multiplier
 (the row/col sums are exact adder trees in hardware, no multipliers).
 This mirrors the paper's circuit exactly: every 8x8 scalar product is the
 approximate one.
+
+With the signed subsystem (repro.signed), mode='sym_i8' instead
+quantizes symmetrically to int8 (zero point structurally 0):
+
+    y = s_x s_w [ Q_x ⊗_signed Q_w ]
+
+which drops the zero-point cross-term matmuls from the hot path entirely
+— the decomposition above degenerates to the single approximate product.
 """
 from __future__ import annotations
 
@@ -44,15 +53,30 @@ class QuantConfig:
     backend: str = "xla"
     rank: int = 32
     compensate: bool = True
+    # Quantization mode: 'asym_u8' (paper-faithful unsigned multiplier +
+    # zero-point decomposition) or 'sym_i8' (symmetric int8 through the
+    # signed multiplier registry — no zero-point cross terms on the hot
+    # path; design names resolve in repro.signed.SIGNED_MULTIPLIERS).
+    mode: str = "asym_u8"
     # The unembed/logits matmul stays exact by default: emulating the
     # approximate multiplier against a 256k vocab dominates activation
     # memory (measured +273 GiB/dev on nemotron — §Perf A3) and real
     # quantized deployments keep the logits layer high-precision.
     quant_unembed: bool = False
 
+    def __post_init__(self):
+        if self.mode not in ("asym_u8", "sym_i8"):
+            raise ValueError(
+                f"unknown quant mode {self.mode!r}; expected 'asym_u8' "
+                f"or 'sym_i8'")
+
     @property
     def enabled(self) -> bool:
         return self.design != "exact"
+
+    @property
+    def signed(self) -> bool:
+        return self.mode == "sym_i8"
 
 
 def _minmax_scale(x, axis=None, eps=1e-8):
@@ -68,6 +92,22 @@ def quantize_uint8(x, axis=None):
     scale, zp = _minmax_scale(x, axis)
     q = jnp.clip(jnp.round(x / scale) + zp, 0, 255)
     return q.astype(jnp.int32), scale, zp
+
+
+def quantize_int8(x, axis=None, eps=1e-8):
+    """Symmetric signed quantization: q in [-128,127], zero point 0.
+
+    Returns (q, scale) with x ~= q * scale.
+    """
+    amax = jax.lax.stop_gradient(
+        jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None))
+    scale = jnp.maximum(amax / 127.0, eps)
+    q = jnp.clip(jnp.round(x / scale), -128, 127)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
 
 
 def dequantize(q, scale, zp):

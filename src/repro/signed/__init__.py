@@ -1,0 +1,21 @@
+"""Signed & recomposed-width approximate arithmetic.
+
+Derives signed int8 x int8 and 16x16 approximate multipliers from the
+paper's unsigned 8x8 cores (core.multipliers):
+
+  * ``multipliers`` — sign-magnitude wrappers and a sign-focused
+    Baugh-Wooley reduction reusing the multicolumn 3,3:2 compressor
+    cells; ``SIGNED_MULTIPLIERS`` mirrors ``core.multipliers.MULTIPLIERS``.
+  * ``recompose`` — 16x16 multipliers composed from four 8x8 blocks
+    (AH*BH, AH*BL, AL*BH, AL*BL) with per-block design assignment;
+    ``RECOMPOSED`` registry + sampled error metrics.
+
+Execution-side consumers: ``core.lut.build_signed_lut`` (offset-shifted
+int8-indexed tables), ``kernels.ops.approx_matmul(..., signed=True)``,
+and the symmetric-signed quantization mode in ``quant``.
+"""
+from . import multipliers, recompose  # noqa: F401
+from .multipliers import SIGNED_MULTIPLIERS  # noqa: F401
+from .recompose import RECOMPOSED  # noqa: F401
+
+__all__ = ["multipliers", "recompose", "SIGNED_MULTIPLIERS", "RECOMPOSED"]

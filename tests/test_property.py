@@ -1,10 +1,19 @@
-"""Property-based tests (hypothesis) on system invariants."""
-import numpy as np
-from hypothesis import given, settings, strategies as st
+"""Property-based tests (hypothesis) on system invariants.
 
-from repro.core import compressors as C, lut, multipliers as M
+The whole module is skipped when the optional ``hypothesis`` dep is
+absent so the tier-1 suite collects green without it.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compressors as C, lut, multipliers as M  # noqa: E402
 
 u8 = st.integers(min_value=0, max_value=255)
+i8 = st.integers(min_value=-128, max_value=127)
 
 
 @settings(max_examples=200, deadline=None)
@@ -78,3 +87,55 @@ def test_quantize_roundtrip_bounded(seed):
     q, s, z = quantize_uint8(jnp.asarray(x))
     back = np.asarray(dequantize(q, s, z))
     assert np.abs(back - x).max() <= float(np.asarray(s)) * 0.51
+
+
+# ---------------------------------------------------------------------------
+# Signed subsystem properties (repro.signed)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(i8, i8)
+def test_signed_error_bounded(a, b):
+    """Signed designs stay within the max |ED| measured exhaustively."""
+    for name in ("design1", "design2", "bw_design1"):
+        t = lut.build_signed_lut(name)
+        e = int(t[a + 128, b + 128]) - a * b
+        assert abs(e) <= 4304
+
+
+@settings(max_examples=200, deadline=None)
+@given(i8, i8)
+def test_sign_magnitude_odd_symmetry(a, b):
+    """f(-a, b) == -f(a, b) for sign-magnitude designs (|a| < 128)."""
+    from repro.signed import SIGNED_MULTIPLIERS
+    if a == -128 or b == -128:
+        return
+    fn = SIGNED_MULTIPLIERS["design2"]
+    assert int(np.asarray(fn(np.asarray(-a), np.asarray(b)))) == \
+        -int(np.asarray(fn(np.asarray(a), np.asarray(b))))
+
+
+@settings(max_examples=100, deadline=None)
+@given(i8, i8)
+def test_bw_exact_matches_product(a, b):
+    from repro.signed.multipliers import mult_bw_exact
+    assert int(np.asarray(mult_bw_exact(np.asarray(a), np.asarray(b)))) \
+        == a * b
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-(1 << 15), (1 << 15) - 1),
+       st.integers(-(1 << 15), (1 << 15) - 1))
+def test_recompose_exact_16x16(a, b):
+    from repro.signed import RECOMPOSED
+    assert int(np.asarray(RECOMPOSED["s16_exact"](np.asarray(a),
+                                                  np.asarray(b)))) == a * b
+
+
+@settings(max_examples=50, deadline=None)
+@given(i8, i8)
+def test_signed_lut_zero_column(a, b):
+    """x*0 == 0 for the untruncated sign-magnitude design."""
+    t = lut.build_signed_lut("design1")
+    assert int(t[a + 128, 128]) == 0
+    assert int(t[128, b + 128]) == 0

@@ -1,0 +1,270 @@
+"""Signed & recomposed-width subsystem tests (repro.signed).
+
+Acceptance-level checks:
+  * every registered signed design matches the gate-level signed LUT
+    bit-exactly through ops.approx_matmul on the non-residual backends,
+    sweeping all 65,536 int8 pairs (the constant-column matmul trick);
+  * exact-design 16x16 recomposition is bit-exact vs the true product;
+  * the symmetric-signed qdot mode runs end-to-end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as lutmod
+from repro.kernels import ops
+from repro.quant import QuantConfig, qdot, quantize_int8
+from repro.signed import RECOMPOSED, SIGNED_MULTIPLIERS
+from repro.signed import multipliers as SM
+from repro.signed import recompose as RC
+
+ALL_SIGNED = sorted(SIGNED_MULTIPLIERS)
+
+
+# ---------------------------------------------------------------------------
+# Gate-level signed cores
+# ---------------------------------------------------------------------------
+
+def test_bw_array_is_exact():
+    """The Baugh-Wooley array reduced exactly == the true signed product
+    for all 65,536 int8 pairs (validates the array construction)."""
+    got = SM.exhaustive_signed_products(SM.mult_bw_exact)
+    want = SM.exhaustive_signed_products(SM.mult_exact_signed)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sign_magnitude_exact_core_is_exact():
+    sm = SM.sign_magnitude(lambda a, b: np.asarray(a, np.int64)
+                           * np.asarray(b, np.int64))
+    got = SM.exhaustive_signed_products(sm)
+    want = SM.exhaustive_signed_products(SM.mult_exact_signed)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int8_min_operand_handled():
+    """|-128| = 128 must flow through the unsigned cores unharmed."""
+    for name in ("design1", "design2", "exact"):
+        fn = SIGNED_MULTIPLIERS[name]
+        v = int(np.asarray(fn(np.asarray(-128), np.asarray(-128))))
+        assert v == int(lutmod.build_signed_lut(name)[0, 0])
+    assert int(lutmod.build_signed_lut("exact")[0, 0]) == 16384
+
+
+@pytest.mark.parametrize("name", [n for n in ALL_SIGNED
+                                  if n not in ("exact", "bw_exact",
+                                               "bw_design1")])
+def test_sign_magnitude_quadrant_symmetry(name):
+    """Sign-magnitude designs: f(-a,b) == -f(a,b) == f(a,-b)."""
+    t = lutmod.build_signed_lut(name).astype(np.int64)
+    a = np.arange(-127, 128)  # -128 has no positive mirror
+    pos = t[np.ix_(a + 128, a + 128)]
+    neg_a = t[np.ix_(-a + 128, a + 128)]
+    np.testing.assert_array_equal(neg_a, -pos)
+
+
+@pytest.mark.parametrize("name", ALL_SIGNED)
+def test_signed_error_stats_sane(name):
+    s = SM.signed_multiplier_stats(name)
+    if name in ("exact", "bw_exact"):
+        assert s["MED"] == 0 and s["ER"] == 0
+    else:
+        assert 0 < s["MED"] < 2000
+        assert 0 < s["ER"] < 1
+        assert s["NMED"] < 0.1
+
+
+def test_signed_error_table_consistent():
+    e = lutmod.signed_error_table("design2").astype(np.int64)
+    r = np.arange(-128, 128, dtype=np.int64)
+    exact = r[:, None] * r[None, :]
+    np.testing.assert_array_equal(
+        lutmod.build_signed_lut("design2").astype(np.int64), exact + e)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: approx_matmul(signed=True) == signed LUT, all 65,536 pairs
+# ---------------------------------------------------------------------------
+
+def _sweep_operands():
+    r = np.arange(-128, 128, dtype=np.int32)
+    A = jnp.asarray(np.broadcast_to(r[:, None], (256, 256)).copy())
+    B = jnp.asarray(np.broadcast_to(r[None, :], (256, 256)).copy())
+    return A, B
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name", ALL_SIGNED)
+def test_approx_matmul_signed_bitexact_full_sweep(name, backend):
+    """out[i,j] = sum_k LUT[i,j] = 256*LUT[i,j] sweeps every int8 pair
+    through the matmul path; bit-exact on the non-residual backends
+    (256*|product| < 2^24 so float32 output is lossless)."""
+    A, B = _sweep_operands()
+    want = 256 * ops.get_signed_lut(name).astype(np.int64)
+    got = np.asarray(ops.approx_matmul(A, B, name, backend, 32, True))
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_approx_matmul_signed_exact_backend():
+    A, B = _sweep_operands()
+    got = np.asarray(ops.approx_matmul(A, B, "design2", "exact", 32, True))
+    want = 256 * ops.get_signed_lut("exact").astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+@pytest.mark.parametrize("backend", ["residual", "residual_xla"])
+def test_approx_matmul_signed_residual_full_rank(backend):
+    """At full rank (256) the residual correction reconstructs the signed
+    error surface up to float rounding."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, (128, 128)).astype(np.int32))
+    b = jnp.asarray(rng.integers(-128, 128, (128, 128)).astype(np.int32))
+    got = np.asarray(ops.approx_matmul(a, b, "design2", backend, 256, True))
+    slut = ops.get_signed_lut("design2").astype(np.int64)
+    an, bn = np.asarray(a), np.asarray(b)
+    want = slut[an[:, :, None] + 128, bn[None, :, :] + 128].sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2.0)
+
+
+def test_signed_error_factors_exact_at_full_rank():
+    F, G, resid = lutmod.signed_error_factors("design2", None)
+    assert resid < 0.5  # integer surface, reconstruction rounds exact
+    e = lutmod.signed_error_table("design2")
+    np.testing.assert_array_equal(
+        np.round(F.astype(np.float64) @ G.astype(np.float64)), e)
+
+
+def test_ste_gradients_flow_signed():
+    a = jnp.asarray(np.random.default_rng(0).integers(-128, 128, (8, 16)),
+                    jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).integers(-128, 128, (16, 4)),
+                    jnp.float32)
+
+    def loss(a_):
+        return jnp.sum(ops.approx_matmul(a_.astype(jnp.int32),
+                                         b.astype(jnp.int32),
+                                         "design2", "xla", 32, True))
+    g = jax.grad(loss)(a)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# 16x16 recomposition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["u16_exact", "s16_exact"])
+def test_recompose_exact_bitexact(name):
+    """Exact-design recomposition == true 16x16 product (acceptance)."""
+    a, b = RC.sample_operands(name, n=1 << 15)
+    np.testing.assert_array_equal(RECOMPOSED[name](a, b), a * b)
+
+
+def test_recompose_registered_with_stats():
+    for name in RECOMPOSED:
+        s = RC.sampled_stats(name, n=1 << 12)
+        assert s["MED"] >= 0 and 0 <= s["ER"] <= 1
+        if name.endswith("_exact") and RECOMPOSED[name].hh == "exact" \
+                and RECOMPOSED[name].ll == "exact":
+            assert s["ER"] == 0
+
+
+def test_recompose_hh_exact_dominates():
+    """Exact high-high block keeps relative error orders of magnitude
+    below the all-approximate assignment (the accuracy/speed knob)."""
+    all_apx = RC.sampled_stats("u16_design2", n=1 << 13)["MED"]
+    hh_exact = RC.sampled_stats("u16_hh_exact", n=1 << 13)["MED"]
+    assert hh_exact < all_apx / 20
+
+
+def test_recompose_decomposition_algebra():
+    """Recomposition with all-exact blocks reproduces the shift-add
+    identity for specific bit patterns (no silent byte aliasing)."""
+    spec = RECOMPOSED["u16_exact"]
+    a = np.array([0x1234, 0xFF00, 0x00FF, 0xFFFF], dtype=np.int64)
+    b = np.array([0x5678, 0x00FF, 0xFF00, 0xFFFF], dtype=np.int64)
+    np.testing.assert_array_equal(spec(a, b), a * b)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric-signed quantization mode
+# ---------------------------------------------------------------------------
+
+def test_quantize_int8_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32) * 3)
+    q, s = quantize_int8(x)
+    qn = np.asarray(q)
+    assert qn.min() >= -128 and qn.max() <= 127
+    back = qn.astype(np.float64) * float(np.asarray(s))
+    assert np.abs(back - np.asarray(x)).max() <= float(np.asarray(s)) * 0.51
+
+
+def test_qdot_sym_exact_matches_matmul():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 7)).astype(np.float32))
+    y = qdot(x, w, QuantConfig(design="exact", mode="sym_i8"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qdot_sym_hotpath_semantics():
+    """Uncompensated sym_i8 qdot == sx*sw * LUT-sum (no zero-point
+    terms anywhere on the path)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+    cfg = QuantConfig(design="design2", mode="sym_i8", compensate=False)
+    y = np.asarray(qdot(x, w, cfg))
+    qx, sx = quantize_int8(x)
+    qw, sw = quantize_int8(w)
+    slut = ops.get_signed_lut("design2").astype(np.int64)
+    qxn, qwn = np.asarray(qx), np.asarray(qw)
+    want = slut[qxn[:, :, None] + 128, qwn[None, :, :] + 128].sum(axis=1)
+    want = want * float(np.asarray(sx)) * float(np.asarray(sw))
+    np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("design", ["design2", "bw_design1"])
+def test_qdot_sym_approx_reasonable(design):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    y = qdot(x, w, QuantConfig(design=design, mode="sym_i8"))
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).mean() / jnp.abs(ref).mean())
+    assert np.isfinite(np.asarray(y)).all()
+    assert rel < 0.6
+
+
+def test_qdot_sym_ste_gradients():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    cfg = QuantConfig(design="design2", mode="sym_i8")
+
+    def loss(w_):
+        return jnp.sum(qdot(x, w_, cfg) ** 2)
+    g = jax.grad(loss)(w)
+    g_ref = jax.grad(lambda w_: jnp.sum((x @ w_) ** 2))(w)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # STE: gradient direction tracks the exact-product gradient
+    cos = float(jnp.vdot(g, g_ref)
+                / (jnp.linalg.norm(g) * jnp.linalg.norm(g_ref)))
+    assert cos > 0.7
+
+
+def test_qdot_sym_through_train_step():
+    """train/step.py runs unchanged on the sym_i8 mode (tiny smoke)."""
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.train import OptConfig, make_train_step, optimizer as opt_mod
+
+    cfg = configs.get_smoke("qwen3-1.7b")
+    qcfg = QuantConfig(design="design2", mode="sym_i8")
+    ocfg = OptConfig()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = configs.make_smoke_batch(cfg, batch=2, seq=8)
+    step = make_train_step(cfg, qcfg, ocfg, microbatches=1, remat=False)
+    params2, _, metrics = step(params, opt_mod.init(params, ocfg), batch)
+    assert np.isfinite(float(metrics["loss"]))
