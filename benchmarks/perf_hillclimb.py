@@ -9,8 +9,13 @@ Cells (selection rationale in EXPERIMENTS.md):
   B mixtral-8x7b   train_4k    — most collective-bound + expert layout
   C qwen3-1.7b     train_4k    — paper-technique cell (backend sweep)
 
+Also hosts the delta-kernel block-shape autotuner (``--autotune-delta``):
+sweeps (TM, TN, TK) for kernels.approx_matmul.delta_matmul on a fixed
+matmul shape and records the winner to experiments/delta_autotune.json.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.perf_hillclimb --iter A1 [A2 ...]
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --autotune-delta
 """
 from __future__ import annotations
 
@@ -18,6 +23,96 @@ import argparse
 import json
 import os
 import sys
+
+# candidate (TM, TN, TK) tiles: MXU-aligned down to VPU-lane-sized.  The
+# per-tile gather surface is TM*TK*TN * 2 B (int16) — 4 MiB at 128^3,
+# 512 KiB at TK=64 with 128x128 out tiles — so smaller TK trades gather
+# buffer for more K-grid revisits of the accumulator tile.
+DELTA_BLOCK_CANDIDATES = [
+    (128, 128, 128), (128, 128, 64), (128, 128, 32),
+    (64, 128, 128), (128, 64, 128), (64, 64, 128),
+    (64, 64, 64), (256, 128, 64),
+]
+
+
+DELTA_REF_KB_CANDIDATES = [8, 16, 32, 64]
+
+
+def autotune_delta(shape=(256, 256, 256), design: str = "design2",
+                   signed: bool = False,
+                   out: str = "experiments/delta_autotune.json"):
+    """Time the two delta lowerings across their tile knobs and record
+    the winners: (TM,TN,TK) for the Pallas kernel (interpret mode off
+    TPU — the relative ordering is the point), k_block for the XLA twin.
+
+    Blocks larger than the (padded) problem are skipped.  Results append
+    to ``out`` so successive runs build a trajectory per shape."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops, ref
+    from repro.kernels.approx_matmul import delta_matmul
+
+    M, K, N = shape
+    rng = np.random.default_rng(0)
+    lo, hi = (-128, 128) if signed else (0, 256)
+    a = jnp.asarray(rng.integers(lo, hi, (M, K)).astype(np.int32))
+    b = jnp.asarray(rng.integers(lo, hi, (K, N)).astype(np.int32))
+    dlut_np = ops.get_delta_lut(design, signed)
+    dlut = jnp.asarray(dlut_np)
+    off = 128 if signed else 0
+
+    if __package__:
+        from .run import bench_us
+    else:  # `python benchmarks/perf_hillclimb.py`
+        from run import bench_us
+
+    # delta_matmul pads operands up, so blocks larger than the problem
+    # still work — but benchmarking them would time mostly padding.
+    # Always keep at least the smallest candidate so tiny shapes tune.
+    blocks = [blk for blk in DELTA_BLOCK_CANDIDATES
+              if blk[0] <= M and blk[1] <= N and blk[2] <= K] \
+        or [min(DELTA_BLOCK_CANDIDATES, key=lambda blk: blk[0]*blk[1]*blk[2])]
+    pallas_results = []
+    for block in blocks:
+        us = bench_us(
+            lambda: delta_matmul(a, b, dlut, block=block, offset=off), reps=5)
+        pallas_results.append({"block": list(block),
+                               "us_per_call": round(us, 1)})
+        print(f"  pallas block={block}: {us:.0f} us")
+
+    # only sweep k_blocks that divide K: delta_matmul_ref silently falls
+    # back to a smaller divisor otherwise, and timing the same effective
+    # config four times would record a winner that never ran
+    kbs = [kb for kb in DELTA_REF_KB_CANDIDATES if K % kb == 0]
+    if not kbs:
+        kbs = [next(kb for kb in (32, 16, 8, 4, 2, 1) if K % kb == 0)]
+    ref_results = []
+    for kb in kbs:
+        f = jax.jit(lambda a, b, kb=kb: ref.delta_matmul_ref(
+            a, b, dlut_np, offset=off, k_block=kb))
+        us = bench_us(lambda: f(a, b), reps=5)
+        ref_results.append({"k_block": kb, "us_per_call": round(us, 1)})
+        print(f"  xla k_block={kb}: {us:.0f} us")
+
+    record = {
+        "shape": list(shape), "design": design, "signed": signed,
+        "pallas": {"results": pallas_results,
+                   "best": min(pallas_results,
+                               key=lambda r: r["us_per_call"])},
+        "xla": {"results": ref_results,
+                "best": min(ref_results, key=lambda r: r["us_per_call"])},
+    }
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    hist = json.load(open(out)) if os.path.exists(out) else []
+    hist.append(record)
+    json.dump(hist, open(out, "w"), indent=1)
+    print(f"[autotune] {design} {'signed' if signed else 'unsigned'} "
+          f"{M}x{K}x{N}: pallas best={tuple(record['pallas']['best']['block'])}"
+          f" ({record['pallas']['best']['us_per_call']:.0f} us), "
+          f"xla best kb={record['xla']['best']['k_block']} "
+          f"({record['xla']['best']['us_per_call']:.0f} us) -> {out}")
+    return record
 
 
 def run_iteration(tag: str):
@@ -91,7 +186,20 @@ def run_iteration(tag: str):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--iter", nargs="+", required=True)
+    ap.add_argument("--iter", nargs="+", default=[])
+    ap.add_argument("--autotune-delta", action="store_true",
+                    help="sweep delta_matmul (TM,TN,TK) block shapes and "
+                         "record the winner to experiments/delta_autotune"
+                         ".json")
+    ap.add_argument("--shape", default="256,256,256",
+                    help="M,K,N for --autotune-delta")
+    ap.add_argument("--signed", action="store_true",
+                    help="autotune the signed (int8-operand) path")
     args = ap.parse_args()
+    if not args.iter and not args.autotune_delta:
+        ap.error("nothing to do: pass --iter and/or --autotune-delta")
     for tag in args.iter:
         run_iteration(tag)
+    if args.autotune_delta:
+        autotune_delta(tuple(int(x) for x in args.shape.split(",")),
+                       signed=args.signed)

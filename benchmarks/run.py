@@ -1,10 +1,13 @@
 """Benchmark driver: one function per paper table/figure + kernel
 micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV summary lines
-plus the full per-table CSVs."""
+plus the full per-table CSVs.  ``--json`` additionally writes the
+machine-readable kernel/qdot rows to BENCH_kernels.json so later PRs
+have a perf baseline to diff against (CI uploads it as an artifact)."""
 from __future__ import annotations
 
 import csv
 import io
+import json
 import sys
 import time
 
@@ -25,35 +28,61 @@ def _csv(rows) -> str:
     return buf.getvalue()
 
 
+def bench_us(fn, reps: int = 7) -> float:
+    """Wall time of fn in microseconds, min-of-reps (robust to scheduler
+    noise; call once to compile before timing)."""
+    import jax
+    fn()  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def kernel_microbench():
-    """LUT kernel vs residual vs exact matmul (CPU wall time; the real
-    target numbers come from the §Roofline analysis)."""
+    """Two-stage delta backend vs legacy LUT kernel vs XLA formulations
+    (CPU wall time, interpret-mode pallas; the real target numbers come
+    from the §Roofline analysis).  The 'delta' / 'pallas_legacy' row
+    pair — both timed through the same jitted ops.approx_matmul entry
+    point — is the A/B the ISSUE-2 acceptance bar reads from
+    BENCH_kernels.json."""
     import jax
     import jax.numpy as jnp
     import numpy as np
     from repro.kernels import ops, ref
+    from repro.kernels.approx_matmul import delta_matmul, lut_matmul
 
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.integers(0, 256, (256, 256)).astype(np.int32))
     b = jnp.asarray(rng.integers(0, 256, (256, 256)).astype(np.int32))
     lut = jnp.asarray(ops.get_lut("design2"))
+    dlut = jnp.asarray(ops.get_delta_lut("design2"))
     F, G = ops.get_factors("design2", 16)
     rows = []
 
     def timed(name, fn):
-        fn()  # compile
-        n = 5
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(fn())
-        us = (time.perf_counter() - t0) / n * 1e6
-        rows.append({"kernel": name, "us_per_call": round(us, 1),
+        rows.append({"kernel": name, "us_per_call": round(bench_us(fn), 1),
                      "shape": "256x256x256"})
 
     timed("exact_matmul", lambda: ref.exact_matmul_ref(a, b))
     timed("lut_gather_xla", lambda: ref.approx_matmul_ref(a, b, lut))
     timed("residual_rank16_xla",
           lambda: ref.residual_corrected_matmul_ref(a, b, F, G))
+    # the A/B the acceptance bar reads: both backends as shipped,
+    # through the same jitted ops.approx_matmul entry point
+    f_delta = jax.jit(lambda a, b: ops.approx_matmul(a, b, "design2",
+                                                     "delta"))
+    f_legacy = jax.jit(lambda a, b: ops.approx_matmul(a, b, "design2",
+                                                      "pallas_legacy"))
+    timed("delta", lambda: f_delta(a, b))
+    timed("pallas_legacy", lambda: f_legacy(a, b))
+    # raw kernels, for completeness (interpret mode off TPU)
+    f_ref = jax.jit(lambda a, b: ref.delta_matmul_ref(a, b, dlut))
+    timed("delta_xla_raw", lambda: f_ref(a, b))
+    timed("lut_pallas_legacy_raw", lambda: lut_matmul(a, b, lut))
+    timed("delta_pallas_interpret_raw", lambda: delta_matmul(a, b, dlut))
     return rows
 
 
@@ -74,18 +103,16 @@ def qdot_mode_bench():
     # mode has no effect on the disabled (exact) baseline: bench it once
     cases = [("asym_u8", "design2", "xla"),
              ("asym_u8", "design2", "residual_xla"),
+             ("asym_u8", "design2", "delta_xla"),
              ("sym_i8", "design2", "xla"),
              ("sym_i8", "design2", "residual_xla"),
+             ("sym_i8", "design2", "delta_xla"),
              ("asym_u8", "exact", "exact")]
     for mode, design, backend in cases:
         cfg = QuantConfig(design=design, backend=backend, mode=mode)
         fn = jax.jit(lambda x, w, c=cfg: qdot(x, w, c))
-        y = fn(x, w)  # compile
-        n = 5
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(fn(x, w))
-        us = (time.perf_counter() - t0) / n * 1e6
+        y = fn(x, w)
+        us = bench_us(lambda: fn(x, w))
         rel = float(jnp.abs(y - ref_y).mean() / jnp.abs(ref_y).mean())
         rows.append({"mode": mode, "design": design, "backend": backend,
                      "us_per_call": round(us, 1),
@@ -105,6 +132,11 @@ def main(argv=None) -> None:
                     help="comma-separated subset of table names to run "
                          "(also matches 'kernel_microbench'/'qdot_modes'); "
                          "default runs everything")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write the kernel_microbench/qdot_modes rows "
+                         "as JSON (default path: BENCH_kernels.json) — the "
+                         "machine-readable perf trajectory CI archives")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -128,11 +160,28 @@ def main(argv=None) -> None:
         print(f"### {name}")
         print(_csv(rows))
         summary.append((name, dt, len(rows)))
+    json_out = {}
     for name, fn in (("kernel_microbench", kernel_microbench),
                      ("qdot_modes", qdot_mode_bench)):
         if wanted(name):
+            rows = fn()
             print(f"### {name}")
-            print(_csv(fn()))
+            print(_csv(rows))
+            json_out[name] = rows
+
+    if args.json and not json_out:
+        print(f"[json] skipped {args.json}: --only excluded both "
+              f"kernel_microbench and qdot_modes (nothing to record)")
+    elif args.json:
+        import platform
+        payload = {"benchmarks": json_out,
+                   "meta": {"python": platform.python_version(),
+                            "platform": platform.platform(),
+                            "unix_time": int(time.time())}}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"[json] wrote {args.json} "
+              f"({sum(len(v) for v in json_out.values())} rows)")
 
     print("### summary  (name,us_per_call,derived)")
     for name, dt, n in summary:

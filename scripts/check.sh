@@ -11,6 +11,9 @@ python -m pytest -x -q
 echo "== benchmark CSV smoke =="
 python -m benchmarks.run --only table4_approx,table_signed_multipliers,qdot_modes
 
+echo "== kernel-bench smoke (writes BENCH_kernels.json) =="
+python -m benchmarks.run --only kernel_microbench --json
+
 echo "== quickstart =="
 python examples/quickstart.py
 

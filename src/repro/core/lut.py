@@ -71,6 +71,41 @@ def signed_error_table(name: str) -> np.ndarray:
     return (build_signed_lut(name).astype(np.int64) - exact).astype(np.int32)
 
 
+@lru_cache(maxsize=None)
+def build_delta_lut(name: str, signed: bool = False) -> np.ndarray:
+    """(256,256) delta table  D[i,j] = approx(a,b) - a*b  for the kernels.
+
+    This is the stage-2 table of the two-stage kernel decomposition
+    (kernels.approx_matmul.delta_matmul): stage 1 computes the exact
+    tile product on the MXU, stage 2 gathers D and adds it.  The sum is
+    bit-exact vs. the gate-level sim by construction.
+
+    Indexing matches the product LUTs: D[a, b] unsigned, D[a+128, b+128]
+    signed (``signed=True`` resolves ``name`` in SIGNED_MULTIPLIERS).
+
+    dtype is the narrowest that holds the design's error range: int16
+    (128 KiB — half the VMEM traffic of the int32 product LUT) for every
+    paper design; designs whose error range overflows int16 (only the
+    pedagogical 'initial' array, min ED -48744) fall back to int32.  The
+    round-trip is asserted exact either way.
+    """
+    e = signed_error_table(name) if signed else error_table(name)
+    i16 = np.iinfo(np.int16)
+    if i16.min <= e.min() and e.max() <= i16.max:
+        d = e.astype(np.int16)
+    else:
+        d = e  # int32 fallback (overflow designs)
+    assert (d.astype(np.int64) == e.astype(np.int64)).all(), \
+        f"delta LUT narrowing overflowed for design {name!r}"
+    return d
+
+
+def delta_fits_int16(name: str, signed: bool = False) -> bool:
+    """Whether the design's delta table packs into int16 (all paper
+    designs do; see build_delta_lut)."""
+    return build_delta_lut(name, signed).dtype == np.int16
+
+
 def exact_rank(name: str) -> int:
     """Exact linear-algebra rank of the error surface over the rationals."""
     e = error_table(name).astype(np.float64)

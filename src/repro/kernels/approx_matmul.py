@@ -1,26 +1,37 @@
 """Pallas TPU kernels for approximate-multiplier matmuls.
 
-Two kernels:
+Three kernels:
 
-  * ``lut_matmul``   — paper-faithful: every scalar product goes through
-    the 256x256 approximate-product LUT (bit-exact vs. the gate-level
-    sim).  The LUT (256 KiB int32) is pinned in VMEM and shared by all
-    grid steps; A/B are tiled (TM,TK)x(TK,TN) with the int32 output tile
-    revisited along the K grid axis as accumulator.  TPU adaptation of
-    the paper's "replace the multiplier cell": the gather runs on the
-    VPU, accumulation stays in VMEM.
+  * ``delta_matmul``   — the two-stage fast path (bit-exact, default
+    ``pallas`` backend).  Mirrors the paper's two-stage reduction at the
+    kernel level: stage 1 computes the *exact* int32 tile product with
+    ``jax.lax.dot`` (MXU), stage 2 gathers a compact int16 delta table
+    ``D[a,b] = approx(a,b) - a*b`` (core.lut.build_delta_lut, 128 KiB —
+    half the VMEM footprint of the int32 product LUT) and accumulates it
+    on the VPU.  The gather is vectorized over the whole (TM,TK,TN) tile
+    in ONE ``jnp.take`` per operand-tile pair instead of a per-k
+    ``fori_loop``; the signed +128 offset folds into the gather index so
+    int8 operands need no pre-shift pass.  Operands are padded to block
+    multiples internally (K-padding is corrected by subtracting the
+    padded rows' constant ``D[off,off]`` contribution).
 
-  * ``residual_matmul`` — beyond-paper fast path: exact matmul on the
-    MXU plus a rank-r correction  sum_r F_r(A) @ G_r(B)  from the SVD
-    factorization of the error surface (core.lut.error_factors).  All
-    FLOPs are MXU matmuls; the only VPU work is two 256-row table
-    lookups per operand tile.  Fidelity vs. r is measured and reported
-    in EXPERIMENTS.md §Perf (the error surface is NOT exactly low-rank —
-    measured rank 247 — so this path trades bit-exactness for speed).
+  * ``lut_matmul``   — paper-faithful legacy path (``pallas_legacy``):
+    every scalar product goes through the 256x256 approximate-product
+    LUT (256 KiB int32 pinned in VMEM), gathered per k-slice on the VPU
+    while the MXU idles.  Kept for A/B benchmarking against
+    ``delta_matmul`` (benchmarks/run.py kernel_microbench).
 
-Block shapes default to MXU-aligned (128, 128) tiles.  Kernels are
-validated against kernels.ref in interpret mode (CPU container); on real
-TPU hardware pass interpret=False.
+  * ``residual_matmul`` — beyond-paper approximate emulation: exact
+    matmul on the MXU plus a rank-r correction  sum_r F_r(A) @ G_r(B)
+    from the SVD factorization of the error surface
+    (core.lut.error_factors).  Trades bit-exactness for pure-MXU FLOPs
+    (the error surface's exact rank is 247).
+
+Block shapes default to MXU-aligned (128, 128) tiles; the M/N grid axes
+are marked ``parallel`` (K stays ``arbitrary`` — the output tile is
+revisited as accumulator).  Kernels are validated against kernels.ref in
+interpret mode (CPU container); on real TPU hardware pass
+interpret=False.
 """
 from __future__ import annotations
 
@@ -30,13 +41,98 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (m, n)."""
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _ceil_mul(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 # ---------------------------------------------------------------------------
-# Kernel A: LUT-gather matmul (paper-faithful)
+# Kernel A: two-stage delta kernel (exact MXU product + int16 delta gather)
 # ---------------------------------------------------------------------------
 
-def _lut_matmul_kernel(a_ref, b_ref, lut_ref, out_ref, *, n_k: int):
+def _delta_matmul_kernel(a_ref, b_ref, dlut_ref, out_ref, *, offset: int):
+    """Grid (M/TM, N/TN, K/TK); K innermost so the out tile accumulates."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.int32)          # (TM, TK)
+    b = b_ref[...].astype(jnp.int32)          # (TK, TN)
+
+    # stage 1: exact tile product, int32 accumulate (MXU on hardware)
+    exact = jax.lax.dot(a, b, preferred_element_type=jnp.int32)
+
+    # stage 2: delta gather — one vectorized lookup over the whole tile.
+    # The signed offset folds into the index (no operand pre-shift pass)
+    # and the cheap per-operand mask proves the index in-bounds, so the
+    # per-element gather skips bounds clamping.
+    dlut = dlut_ref[...].reshape(-1)          # (65536,) int16 in VMEM
+    idx = ((a + offset) & 0xFF)[:, :, None] * 256 \
+        + ((b + offset) & 0xFF)[None, :, :]
+    delta = dlut.at[idx].get(mode="promise_in_bounds")
+    out_ref[...] += exact + delta.sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "offset"))
+def delta_matmul(a: jax.Array, b: jax.Array, dlut: jax.Array,
+                 block: Tuple[int, int, int] = (128, 128, 128),
+                 interpret: bool = True, offset: int = 0) -> jax.Array:
+    """S[m,n] = sum_k ( a[m,k]*b[k,n] + D[a[m,k]+off, b[k,n]+off] ).
+
+    Bit-exact approximate matmul via the two-stage decomposition.
+    a: (M,K), b: (K,N) integer arrays; dlut: (256,256) int16 (or int32
+    for overflow designs) delta table from core.lut.build_delta_lut.
+    ``offset=128`` selects signed (int8-valued) operands against a
+    signed delta table.  Shapes need NOT be block multiples: operands
+    are zero-padded here and the K-padding's constant D[off,off]
+    contribution is subtracted from the result.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    TM, TN, TK = block
+    Mp, Kp, Np = _ceil_mul(M, TM), _ceil_mul(K, TK), _ceil_mul(N, TN)
+    a = _pad_to(a.astype(jnp.int32), Mp, Kp)
+    b = _pad_to(b.astype(jnp.int32), Kp, Np)
+    grid = (Mp // TM, Np // TN, Kp // TK)
+    out = pl.pallas_call(
+        functools.partial(_delta_matmul_kernel, offset=offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((256, 256), lambda i, j, k: (0, 0)),  # VMEM-pinned
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, dlut)
+    if Kp > K:
+        # padded k rows are (0,0) operand pairs: exact part adds 0, the
+        # gather adds D[off,off] per padded row — subtract it.
+        out = out - (Kp - K) * dlut[offset, offset].astype(jnp.int32)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: LUT-gather matmul (paper-faithful legacy path)
+# ---------------------------------------------------------------------------
+
+def _lut_matmul_kernel(a_ref, b_ref, lut_ref, out_ref):
     """Grid (M/TM, N/TN, K/TK); K innermost so out tile accumulates."""
     k = pl.program_id(2)
 
@@ -52,8 +148,7 @@ def _lut_matmul_kernel(a_ref, b_ref, lut_ref, out_ref, *, n_k: int):
         idx = a[:, kk][:, None] * 256 + b[kk, :][None, :]   # (TM, TN)
         return acc + jnp.take(lut, idx, axis=0)
 
-    out_ref[...] += jax.lax.fori_loop(
-        0, a.shape[1], body, jnp.zeros_like(out_ref))
+    out_ref[...] = jax.lax.fori_loop(0, a.shape[1], body, out_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -63,7 +158,8 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
     """S[m,n] = sum_k LUT[a[m,k], b[k,n]]   (uint8-valued operands).
 
     a: (M,K), b: (K,N) integer arrays in [0,255]; lut: (256,256) int32.
-    M,K,N must be multiples of the block shape (pad upstream).
+    M,K,N must be multiples of the block shape (pad upstream; the delta
+    kernel pads internally and is the default backend).
     """
     M, K = a.shape
     K2, N = b.shape
@@ -71,10 +167,9 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
     TM, TN, TK = block
     assert M % TM == 0 and N % TN == 0 and K % TK == 0, \
         (a.shape, b.shape, block)
-    n_k = K // TK
-    grid = (M // TM, N // TN, n_k)
+    grid = (M // TM, N // TN, K // TK)
     return pl.pallas_call(
-        functools.partial(_lut_matmul_kernel, n_k=n_k),
+        _lut_matmul_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
@@ -83,16 +178,17 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
         ],
         out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a.astype(jnp.int32), b.astype(jnp.int32), lut.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
-# Kernel B: exact MXU matmul + rank-r error correction (beyond-paper)
+# Kernel C: exact MXU matmul + rank-r error correction (beyond-paper)
 # ---------------------------------------------------------------------------
 
-def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, n_k: int,
-                     offset: int = 0):
+def _residual_kernel(a_ref, b_ref, f_ref, g_ref, out_ref, *, offset: int = 0):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -135,11 +231,10 @@ def residual_matmul(a: jax.Array, b: jax.Array, F: jax.Array, G: jax.Array,
     assert K == K2
     TM, TN, TK = block
     assert M % TM == 0 and N % TN == 0 and K % TK == 0
-    n_k = K // TK
     r = F.shape[1]
-    grid = (M // TM, N // TN, n_k)
+    grid = (M // TM, N // TN, K // TK)
     return pl.pallas_call(
-        functools.partial(_residual_kernel, n_k=n_k, offset=offset),
+        functools.partial(_residual_kernel, offset=offset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
@@ -149,6 +244,8 @@ def residual_matmul(a: jax.Array, b: jax.Array, F: jax.Array, G: jax.Array,
         ],
         out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a.astype(jnp.int32), b.astype(jnp.int32),
       F.astype(jnp.float32), G.astype(jnp.float32))

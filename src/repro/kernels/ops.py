@@ -2,11 +2,25 @@
 
 ``approx_matmul`` is the operator the quantized layers call.  Backends:
 
-  'xla'      — jnp.take-based formulation (ref semantics); what the big
-               model graphs lower with on any platform (the dry-run path).
-  'pallas'   — the Pallas LUT kernel (interpret mode on CPU).
+  'delta'    — the two-stage fast path (bit-exact, recommended): exact
+               int32 product on the MXU + int16 delta-table gather.
+               Platform-adaptive lowering: the Pallas kernel on TPU,
+               its blocked-XLA twin elsewhere (interpret-mode Pallas is
+               a validation vehicle, not a fast path).  Pads any shape;
+               the signed offset folds into the gather index (no
+               operand pre-shift).
+  'pallas'   — the delta Pallas kernel explicitly (interpret mode off
+               TPU; what the kernel tests exercise).
+  'delta_xla'— the blocked-XLA twin explicitly (exact dot + K-blocked
+               delta gather); what big-model graphs lower with in place
+               of the old (M,K,N)-index-surface product-LUT gather.
+  'pallas_legacy'
+             — the original per-k LUT-gather Pallas kernel, kept for
+               A/B benchmarking (benchmarks/run.py kernel_microbench).
+  'xla'      — jnp.take product-LUT formulation (ref semantics); the
+               dry-run path, lowers everywhere.
   'residual' — exact MXU matmul + rank-r correction (fast, approximate
-               emulation; r configurable).
+               emulation; r configurable; NOT bit-exact).
   'exact'    — plain integer matmul (the baseline multiplier).
 
 All backends share a straight-through-estimator VJP: the backward pass
@@ -23,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .approx_matmul import lut_matmul, residual_matmul
+from .approx_matmul import delta_matmul, lut_matmul, residual_matmul
 
 _LUT_CACHE: dict = {}
 
@@ -49,6 +63,17 @@ def get_signed_lut(design: str) -> np.ndarray:
     if key not in _LUT_CACHE:
         from repro.core import lut as lutmod
         _LUT_CACHE[key] = lutmod.build_signed_lut(design)
+    return _LUT_CACHE[key]
+
+
+def get_delta_lut(design: str, signed: bool = False) -> np.ndarray:
+    """Delta table D = approx - exact for the two-stage kernel, int16
+    where the design's error range allows (core.lut.build_delta_lut);
+    'exact' is the all-zero table."""
+    key = ("delta", design, signed)
+    if key not in _LUT_CACHE:
+        from repro.core import lut as lutmod
+        _LUT_CACHE[key] = lutmod.build_delta_lut(design, signed)
     return _LUT_CACHE[key]
 
 
@@ -93,9 +118,24 @@ def _approx_matmul_fwd_impl(a, b, design, backend, rank, signed=False):
         # surface unless XLA fuses it — fine at test/benchmark scale, use
         # 'residual_xla' for the big-model graphs (see DESIGN.md §Perf).
         out = ref.approx_matmul_ref(a2, b, lut(), offset=off)
-    elif backend == "pallas":
-        # The LUT kernel is offset-free: int8 operands are pre-shifted to
-        # the [0,255] index domain of the signed table.
+    elif backend in ("pallas", "delta", "delta_xla"):
+        # Two-stage delta path: exact MXU product + int16 delta gather.
+        # Signed operands index the table via the folded-in offset; no
+        # pre-shift pass, and shapes need not be block multiples.
+        # 'delta' picks the lowering for the platform: the Pallas kernel
+        # on real TPU, the blocked-XLA twin on CPU/GPU (where Pallas
+        # would run in interpret mode — semantics-equal but emulated).
+        on_tpu = jax.default_backend() == "tpu"
+        if backend == "pallas" or (backend == "delta" and on_tpu):
+            out = delta_matmul(a2, b,
+                               jnp.asarray(get_delta_lut(design, signed)),
+                               offset=off, interpret=not on_tpu)
+        else:
+            out = ref.delta_matmul_ref(a2, b, get_delta_lut(design, signed),
+                                       offset=off)
+    elif backend == "pallas_legacy":
+        # The legacy LUT kernel is offset-free: int8 operands are
+        # pre-shifted to the [0,255] index domain of the signed table.
         out = lut_matmul(a2.astype(jnp.int32) + off,
                          b.astype(jnp.int32) + off, jnp.asarray(lut()))
     elif backend == "residual":

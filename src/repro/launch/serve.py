@@ -33,6 +33,10 @@ def main(argv=None):
                     help="asym_u8: unsigned multiplier + zero-point "
                          "decomposition; sym_i8: symmetric int8 through "
                          "the signed multiplier subsystem")
+    ap.add_argument("--prequantize", action="store_true",
+                    help="quantize the (static) weights once up front "
+                         "instead of per decode step (identical quantized "
+                         "values; see quant.prequantize_weights)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -42,6 +46,9 @@ def main(argv=None):
     s_max = args.prompt_len + args.gen_len
 
     params = T.init_params(jax.random.PRNGKey(0), cfg)
+    if args.prequantize:
+        from repro.quant import prequantize_weights
+        params = prequantize_weights(params, qcfg)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
 

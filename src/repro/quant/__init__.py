@@ -1,6 +1,8 @@
 from .quantize import (QuantConfig, quantize_uint8, quantize_int8,
                        dequantize, dequantize_int8, fake_quant)
-from .linear import qdot, qeinsum_heads
+from .linear import (QuantizedWeight, prequantize_weights, qdot,
+                     qeinsum_heads)
 
 __all__ = ["QuantConfig", "quantize_uint8", "quantize_int8", "dequantize",
-           "dequantize_int8", "fake_quant", "qdot", "qeinsum_heads"]
+           "dequantize_int8", "fake_quant", "qdot", "qeinsum_heads",
+           "QuantizedWeight", "prequantize_weights"]

@@ -10,6 +10,17 @@ Shardability: qdot is pure jnp/custom_vjp; under pjit the operand
 shardings propagate through quantize (elementwise), the LUT gather
 (batched take — replicated table), and the matmul terms, so the same
 code paths run on the 2x16x16 production mesh (verified by the dry-run).
+
+Weight prequantization: qdot re-derives (q_w, s_w, z_w) from the master
+weights on every call, so a jitted serve step pays full weight
+min/max/round/clip work per decode token.  ``prequantize_weights``
+quantizes a params tree ONCE (outside jit) and wraps each dense weight
+in a ``QuantizedWeight`` pytree; qdot consumes the cached values and the
+per-step graph drops the weight-quantization ops entirely.  The cached
+(q, scale, zp) are value-identical to what on-the-fly quantization
+computes (per scan slice), so outputs agree to float-reduction ULPs —
+the two graph shapes may fuse float sums differently — and greedy decode
+tokens match.  The master weights ride along for the STE/exact branches.
 """
 from __future__ import annotations
 
@@ -20,6 +31,88 @@ from repro.kernels import ops
 from .quantize import QuantConfig, quantize_int8, quantize_uint8
 
 _MF_CACHE: dict = {}
+
+# Param-dict keys that flow through qdot (models/): every dense kernel
+# is named "w*" ("wq", "w_up", "wo_gate", ...) plus the MoE router and
+# the encoder frontend projection.  Norm gains, embeddings, conv stems
+# deliberately do NOT match.
+_DENSE_KEYS = ("router", "frontend_proj")
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """A dense weight with its quantization precomputed.
+
+    Transparent to qdot: pass one where a float (…, K, N) weight went.
+    Carries the master weights ``w`` (STE / cfg.enabled=False branches)
+    alongside the cached ``q``/``scale``/``zp``; leading (stacked-layer /
+    expert) axes are preserved so jax.lax.scan slices all fields in
+    lockstep with per-slice scales identical to on-the-fly quantization.
+    """
+
+    def __init__(self, w, q, scale, zp, mode: str):
+        self.w = w
+        self.q = q
+        self.scale = scale
+        self.zp = zp          # None for symmetric (sym_i8) quantization
+        self.mode = mode
+
+    @property
+    def ndim(self):
+        return self.w.ndim
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    def tree_flatten(self):
+        return (self.w, self.q, self.scale, self.zp), self.mode
+
+    @classmethod
+    def tree_unflatten(cls, mode, children):
+        return cls(*children, mode=mode)
+
+    def __repr__(self):
+        return (f"QuantizedWeight(shape={tuple(self.w.shape)}, "
+                f"mode={self.mode!r})")
+
+
+def _quantize_weight(w: jax.Array, cfg: QuantConfig) -> QuantizedWeight:
+    """Quantize over the trailing (K, N) axes; leading axes are stacked
+    layers/experts and keep their own scales (matching what on-the-fly
+    qdot computes per scan slice)."""
+    axis = None if w.ndim == 2 else tuple(range(w.ndim - 2, w.ndim))
+    if cfg.signed:
+        q, s = quantize_int8(w, axis)
+        return QuantizedWeight(w, q, s, None, cfg.mode)
+    q, s, z = quantize_uint8(w, axis)
+    return QuantizedWeight(w, q, s, z, cfg.mode)
+
+
+def prequantize_weights(params, cfg: QuantConfig):
+    """Return a copy of ``params`` with every qdot-bound dense weight
+    wrapped in a QuantizedWeight (call once, outside jit).
+
+    No-op when cfg.enabled is False.  Used by launch/serve.py
+    (--prequantize) to drop per-decode-step weight quantization.
+    """
+    if not cfg.enabled:
+        return params
+
+    def is_dense(k, v):
+        return ((k in _DENSE_KEYS or k.startswith("w"))
+                and isinstance(v, jax.Array) and v.ndim >= 2
+                and jnp.issubdtype(v.dtype, jnp.floating))
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: _quantize_weight(v, cfg) if is_dense(k, v) else walk(v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
 
 
 def _mean_field_tables(design: str, signed: bool = False):
@@ -45,24 +138,37 @@ def _mean_field_tables(design: str, signed: bool = False):
 def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     """y[..., n] = sum_k approx(x[..., k], w[k, n])  (dequantized float32).
 
-    x: (..., K) float; w: (K, N) float (master weights).
+    x: (..., K) float; w: (K, N) float master weights, or a
+    QuantizedWeight (prequantize_weights) to skip per-call weight
+    quantization.
     """
+    pre = w if isinstance(w, QuantizedWeight) else None
+    if pre is not None:
+        w = pre.w
+        if pre.mode != cfg.mode:   # stale cache: fall back to master
+            pre = None
     if not cfg.enabled:
         return jnp.matmul(x, w)
     if cfg.signed:
-        y = _qdot_signed(x, w, cfg)
+        y = _qdot_signed(x, w, cfg, pre)
     else:
-        y = _qdot_asym(x, w, cfg)
+        y = _qdot_asym(x, w, cfg, pre)
     # STE: gradient flows as if y == x @ w  (exact fp product)
     y_ste = jnp.matmul(x, w)
     return y_ste + jax.lax.stop_gradient(y - y_ste)
 
 
-def _qdot_asym(x, w, cfg):
+def _qdot_asym(x, w, cfg, pre=None):
     """Paper-faithful uint8 path: zero-point decomposition around the
     unsigned approximate product."""
     qx, sx, zx = quantize_uint8(x)
-    qw, sw, zw = quantize_uint8(w)
+    if pre is not None:
+        # reshape the cached per-layer scales to 0-d: a scan-sliced (1,1)
+        # scale must broadcast EXACTLY like the on-the-fly scalar so the
+        # lowered graph (and its float rounding) is bit-identical
+        qw, sw, zw = pre.q, pre.scale.reshape(()), pre.zp.reshape(())
+    else:
+        qw, sw, zw = quantize_uint8(w)
     K = x.shape[-1]
     prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank)
     prod = prod.astype(jnp.float32)
@@ -78,11 +184,14 @@ def _qdot_asym(x, w, cfg):
     return y * (sx * sw)
 
 
-def _qdot_signed(x, w, cfg):
+def _qdot_signed(x, w, cfg, pre=None):
     """Symmetric int8 hot path: Q_x ⊗_signed Q_w straight through the
     signed backend — no zero-point cross-term matmuls."""
     qx, sx = quantize_int8(x)
-    qw, sw = quantize_int8(w)
+    if pre is not None:
+        qw, sw = pre.q, pre.scale.reshape(())  # 0-d: see _qdot_asym
+    else:
+        qw, sw = quantize_int8(w)
     K = x.shape[-1]
     prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank,
                              True)

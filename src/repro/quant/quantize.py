@@ -37,7 +37,10 @@ class QuantConfig:
 
     design:  'exact' | 'design1' | 'design2' | 'initial' | competitor ids
     backend: 'xla' (gather formulation, lowers everywhere — dry-run path)
-             'pallas' (LUT kernel), 'residual' (rank-r fast emulation),
+             'pallas'/'delta' (two-stage delta kernel: exact MXU product
+             + int16 delta gather, bit-exact), 'delta_xla' (its XLA
+             twin), 'pallas_legacy' (per-k product-LUT gather kernel),
+             'residual' (rank-r fast emulation, not bit-exact),
              'exact' (bypass; fp baseline uses design='exact' as well)
     rank:    correction rank for the 'residual' backend
     compensate: beyond-paper mean-field bias compensation.  The paper's

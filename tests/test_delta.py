@@ -1,0 +1,157 @@
+"""Delta-LUT two-stage kernel: exhaustive bit-exactness, int16 packing,
+and the internal padding path.
+
+The exhaustive sweeps use the K=1 matmul trick: with a = (256,1) holding
+every operand value and b = (1,256) likewise, the kernel's output IS the
+full 256x256 product table — one pallas_call covers all 65,536 operand
+pairs per design (and exercises the K-padding correction, since K=1 pads
+up to a whole block).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as lutmod
+from repro.core.multipliers import MULTIPLIERS
+from repro.kernels import ops, ref
+from repro.kernels.approx_matmul import delta_matmul
+from repro.signed.multipliers import SIGNED_MULTIPLIERS
+
+# the pedagogical 'initial' array is the one registered design whose
+# error range (min ED -48744) overflows int16; it falls back to int32
+INT32_FALLBACK = {("initial", False)}
+
+
+# ---------------------------------------------------------------------------
+# Table-level: delta + exact == product table, and int16 packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(MULTIPLIERS))
+def test_delta_lut_unsigned_exhaustive(name):
+    d = lutmod.build_delta_lut(name)
+    a = np.arange(256, dtype=np.int64)
+    exact = a[:, None] * a[None, :]
+    np.testing.assert_array_equal(d.astype(np.int64) + exact,
+                                  lutmod.build_lut(name).astype(np.int64))
+
+
+@pytest.mark.parametrize("name", sorted(SIGNED_MULTIPLIERS))
+def test_delta_lut_signed_exhaustive(name):
+    d = lutmod.build_delta_lut(name, signed=True)
+    r = np.arange(-128, 128, dtype=np.int64)
+    exact = r[:, None] * r[None, :]
+    np.testing.assert_array_equal(d.astype(np.int64) + exact,
+                                  lutmod.build_signed_lut(name).astype(np.int64))
+
+
+def test_delta_lut_int16_range_every_design():
+    """Every registered design packs into int16 except the known
+    int32-fallback set — and the fallback still round-trips exactly."""
+    for name in MULTIPLIERS:
+        want16 = (name, False) not in INT32_FALLBACK
+        assert lutmod.delta_fits_int16(name) == want16, name
+        assert lutmod.build_delta_lut(name).dtype == (
+            np.int16 if want16 else np.int32), name
+    for name in SIGNED_MULTIPLIERS:
+        assert (name, True) not in INT32_FALLBACK
+        assert lutmod.build_delta_lut(name, signed=True).dtype == np.int16, \
+            name
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: exhaustive 65,536-pair sweeps through the pallas kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["delta", "pallas"])
+@pytest.mark.parametrize("name", sorted(MULTIPLIERS))
+def test_delta_matmul_unsigned_kernel_exhaustive(name, backend):
+    a = jnp.arange(256, dtype=jnp.int32)[:, None]           # (256, 1)
+    b = jnp.arange(256, dtype=jnp.int32)[None, :]           # (1, 256)
+    got = ops.approx_matmul(a, b, name, backend, 32, False)
+    np.testing.assert_array_equal(np.asarray(got).astype(np.int64),
+                                  lutmod.build_lut(name).astype(np.int64))
+
+
+@pytest.mark.parametrize("backend", ["delta", "pallas"])
+@pytest.mark.parametrize("name", sorted(SIGNED_MULTIPLIERS))
+def test_delta_matmul_signed_kernel_exhaustive(name, backend):
+    r = jnp.arange(-128, 128, dtype=jnp.int32)
+    got = ops.approx_matmul(r[:, None], r[None, :], name, backend, 32, True)
+    np.testing.assert_array_equal(np.asarray(got).astype(np.int64),
+                                  lutmod.build_signed_lut(name).astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Padding path: shapes that are NOT block multiples
+# ---------------------------------------------------------------------------
+
+PAD_SHAPES = [(100, 70, 36), (130, 200, 50), (1, 300, 1), (257, 129, 255)]
+
+
+@pytest.mark.parametrize("shape", PAD_SHAPES)
+@pytest.mark.parametrize("signed", [False, True])
+def test_delta_matmul_padding(shape, signed):
+    m, k, n = shape
+    lo, hi = (-128, 128) if signed else (0, 256)
+    off = 128 if signed else 0
+    rng = np.random.default_rng(m * 1000 + k)
+    a = jnp.asarray(rng.integers(lo, hi, (m, k)).astype(np.int32))
+    b = jnp.asarray(rng.integers(lo, hi, (k, n)).astype(np.int32))
+    lut = ops.get_signed_lut("design2") if signed else ops.get_lut("design2")
+    want = ref.approx_matmul_ref(a, b, lut, offset=off)
+    dlut = jnp.asarray(ops.get_delta_lut("design2", signed))
+    got = delta_matmul(a, b, dlut, offset=off)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [(128, 128, 128), (64, 128, 64),
+                                   (128, 64, 32)])
+def test_delta_matmul_block_sweep_tiled(block):
+    """Multi-tile shapes against the XLA oracle, several block shapes
+    (what the perf_hillclimb autotuner sweeps)."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 256, (256, 384)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, 256, (384, 256)).astype(np.int32))
+    lut = ops.get_lut("design2")
+    want = ref.approx_matmul_ref(a, b, lut)
+    dlut = jnp.asarray(ops.get_delta_lut("design2"))
+    got = delta_matmul(a, b, dlut, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Backend routing equivalences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["delta", "pallas", "delta_xla",
+                                     "pallas_legacy"])
+def test_bitexact_backends_agree(backend):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, 256, (64, 96)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, 256, (96, 32)).astype(np.int32))
+    want = np.asarray(ops.approx_matmul(a, b, "design1", "xla", 32, False))
+    if backend == "pallas_legacy":
+        # the legacy kernel does not pad: use block-multiple shapes
+        a = jnp.asarray(rng.integers(0, 256, (128, 128)).astype(np.int32))
+        b = jnp.asarray(rng.integers(0, 256, (128, 128)).astype(np.int32))
+        want = np.asarray(ops.approx_matmul(a, b, "design1", "xla", 32,
+                                            False))
+    got = np.asarray(ops.approx_matmul(a, b, "design1", backend, 32, False))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_delta_ref_matches_gather_ref_signed():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int32))
+    b = jnp.asarray(rng.integers(-128, 128, (64, 64)).astype(np.int32))
+    want = ref.approx_matmul_ref(a, b, ops.get_signed_lut("design2"),
+                                 offset=128)
+    got = ref.delta_matmul_ref(a, b, ops.get_delta_lut("design2", True),
+                               offset=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_exact_design_delta_is_zero():
+    d = ops.get_delta_lut("exact")
+    assert d.dtype == np.int16 and not d.any()
