@@ -121,6 +121,61 @@ def qdot_mode_bench():
     return rows
 
 
+def serve_decode_bench():
+    """Decode-step wall time across the quantization precomputation
+    ladder (quant/linear.py): dynamic -> prequantized weights ->
+    +calibrated static activation scales -> +per-layer design plan.
+    min-of-7 single-step timing through the jitted serve step on the
+    smoke config; the static-scale rows are the ISSUE-3 acceptance
+    numbers (static decode vs dynamic quantization)."""
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.calib import (apply_calibration, apply_plan,
+                             calibrate_decode, plan_designs)
+    from repro.models import transformer as T
+    from repro.quant import QuantConfig, prequantize_weights
+    from repro.train import make_serve_step
+
+    cfg = configs.get_smoke("qwen3-1.7b")
+    B, P = 4, 4
+    rows = []
+    for mode in ("asym_u8", "sym_i8"):
+        qcfg = QuantConfig(design="design2", backend="xla", mode=mode)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        pp = prequantize_weights(params, qcfg)
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, (B, P)).astype(np.int32)
+        table = calibrate_decode(pp, cfg, qcfg, prompts, gen_len=2)
+        sp = apply_calibration(pp, table)
+        plan = plan_designs(table, qcfg, arch="qwen3-1.7b")
+        mp = apply_plan(sp, plan, qcfg)
+        step = jax.jit(make_serve_step(cfg, qcfg))
+        base = None
+        for name, ps in (("dynamic", params), ("prequant", pp),
+                         ("prequant+static", sp),
+                         ("prequant+static+plan", mp)):
+            st = T.init_decode_state(cfg, B, P + 16)
+            tok = jax.numpy.full((B, 1), 5, jax.numpy.int32)
+
+            # single decode steps are ~1 ms on this container: time a
+            # 10-step window per sample (state not donated, so every
+            # call is identical work) and report the per-step min-of-7
+            def window(ps=ps, st=st, tok=tok):
+                for _ in range(10):
+                    out = step(ps, st, tok)
+                return out
+
+            us = bench_us(window) / 10.0
+            base = base if base is not None else us
+            rows.append({"config": name, "mode": mode,
+                         "us_per_step": round(us, 1),
+                         "speedup_vs_dynamic": round(base / us, 2),
+                         "shape": f"B{B}_{cfg.name}"})
+        rows[-1]["plan_histogram"] = str(plan.histogram())
+    return rows
+
+
 def main(argv=None) -> None:
     import argparse
     if __package__:
@@ -140,7 +195,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if only:
-        known = set(tables.ALL) | {"kernel_microbench", "qdot_modes"}
+        known = set(tables.ALL) | {"kernel_microbench", "qdot_modes",
+                                   "serve_decode"}
         unknown = only - known
         if unknown:
             ap.error(f"unknown benchmark name(s) {sorted(unknown)}; "
@@ -162,7 +218,8 @@ def main(argv=None) -> None:
         summary.append((name, dt, len(rows)))
     json_out = {}
     for name, fn in (("kernel_microbench", kernel_microbench),
-                     ("qdot_modes", qdot_mode_bench)):
+                     ("qdot_modes", qdot_mode_bench),
+                     ("serve_decode", serve_decode_bench)):
         if wanted(name):
             rows = fn()
             print(f"### {name}")
@@ -170,8 +227,9 @@ def main(argv=None) -> None:
             json_out[name] = rows
 
     if args.json and not json_out:
-        print(f"[json] skipped {args.json}: --only excluded both "
-              f"kernel_microbench and qdot_modes (nothing to record)")
+        print(f"[json] skipped {args.json}: --only excluded "
+              f"kernel_microbench, qdot_modes and serve_decode "
+              f"(nothing to record)")
     elif args.json:
         import platform
         payload = {"benchmarks": json_out,

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Calibrate -> design-plan one-liner: produces
+# experiments/design_plan_<arch>.json (consumed by launch/serve.py
+# --plan and launch/train.py --plan).
+#
+#   scripts/make_plan.sh [arch] [extra repro.calib.plan args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARCH="${1:-qwen3-1.7b}"
+shift || true
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.calib --arch "$ARCH" --smoke --batches 2 \
+    --out "experiments/design_plan_${ARCH}.json" "$@"

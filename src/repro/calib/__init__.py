@@ -1,0 +1,27 @@
+"""repro.calib — calibration & design-planning subsystem.
+
+Turns quantization parameters and multiplier-design choice from
+per-call dynamic decisions into a precomputed, servable plan:
+
+  observe.py  named observers over qdot call sites -> CalibrationTable
+              (per-layer activation ranges + operand histograms)
+  static.py   install calibrated STATIC activation scales on a
+              prequantized tree (drops the per-token min/max reduction)
+  plan.py     per-layer MED×PDAP design search -> DesignPlan JSON,
+              installed as per-layer delta LUTs riding the layer scan
+
+Workflow:  prequantize_weights -> calibrate -> apply_calibration ->
+plan_designs -> apply_plan -> serve (launch/serve.py --plan).
+"""
+from .observe import (CalibrationTable, Observer, calibrate,
+                      calibrate_decode, observing, pscan, site_key)
+from .static import apply_calibration, coverage
+from .plan import (DesignPlan, apply_plan, design_cost,
+                   make_plan_injector, plan_designs, recompose16_frontier,
+                   weighted_med)
+
+__all__ = ["CalibrationTable", "Observer", "calibrate", "calibrate_decode",
+           "observing", "pscan", "site_key", "apply_calibration",
+           "coverage", "DesignPlan", "apply_plan", "design_cost",
+           "make_plan_injector", "plan_designs", "recompose16_frontier",
+           "weighted_med"]

@@ -1,0 +1,5 @@
+"""`python -m repro.calib` — the calibrate -> plan CLI (calib.plan)."""
+from .plan import main
+
+if __name__ == "__main__":
+    main()

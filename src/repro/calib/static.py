@@ -1,0 +1,100 @@
+"""Static-quantization path: install calibrated activation scales.
+
+``apply_calibration(pparams, table)`` walks a prequantized params tree
+and attaches, to every QuantizedWeight, the STATIC activation quantizer
+fixed by the calibration table: per-layer (scale, zp) stacked along the
+wrapper's leading (layer/expert) axes so jax.lax.scan slices each
+layer's quantizer next to its weights.  qdot then quantizes activations
+with the fixed scale — the per-token min/max reduction (and its
+scale/zp arithmetic) disappears from the jitted decode step entirely
+(measured in BENCH_kernels.json `serve_decode`).
+
+The quantized integers still go through the approximate multiplier
+unchanged; static scales only pin WHERE the 256-entry operand grid sits.
+Ranges come from min/max (asym_u8) or absmax (sym_i8) over the
+calibration batches, so out-of-range activations on held-out data clip
+— the standard static-quant trade, bounded in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import linear as qlin
+from .observe import CalibrationTable, site_key
+
+
+def _lead_indices(lead):
+    return list(np.ndindex(*lead)) if lead else [()]
+
+
+def apply_calibration(pparams, table: CalibrationTable, *,
+                      strict: bool = True):
+    """Return a copy of ``pparams`` (a prequantize_weights tree) whose
+    QuantizedWeights carry static activation quantizers from ``table``.
+
+    strict=True raises on sites the calibration pass never visited
+    (e.g. a pattern slot the batches never exercised); strict=False
+    leaves them dynamic."""
+
+    def install(node):
+        if isinstance(node, qlin.QuantizedWeight):
+            if node.mode != table.mode:
+                raise ValueError(
+                    f"calibration table was observed under mode "
+                    f"{table.mode!r} but weights are prequantized for "
+                    f"{node.mode!r} (site {node.path!r})")
+            lead = tuple(int(d) for d in node.w.shape[:-2])
+            scales = np.zeros(lead, np.float32)
+            zps = np.zeros(lead, np.float32)
+            for idx in _lead_indices(lead):
+                key = site_key(node.path, idx)
+                if key not in table.sites:
+                    if strict:
+                        raise KeyError(
+                            f"site {key!r} missing from the calibration "
+                            f"table ({len(table.sites)} sites recorded); "
+                            f"run more representative batches or pass "
+                            f"strict=False to leave it dynamic")
+                    return node
+                s, z = table.act_quant(key)
+                scales[idx] = s
+                zps[idx] = 0.0 if z is None else z
+            return node.replace(
+                act_scale=jnp.asarray(scales),
+                act_zp=(jnp.asarray(zps) if table.mode == "asym_u8"
+                        else None))
+        if isinstance(node, dict):
+            return {k: install(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(install(v) for v in node)
+        return node
+
+    return install(pparams)
+
+
+def coverage(pparams, table: CalibrationTable) -> dict:
+    """How much of the model the table covers: {sites_expected,
+    sites_recorded, missing} — surfaced by the CLI so a thin
+    calibration run is loud, not silent."""
+    expected = []
+
+    def walk(node):
+        if isinstance(node, qlin.QuantizedWeight):
+            lead = tuple(int(d) for d in node.w.shape[:-2])
+            expected.extend(site_key(node.path, idx)
+                            for idx in _lead_indices(lead))
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pparams)
+    missing = [k for k in expected if k not in table.sites]
+    return {"sites_expected": len(expected),
+            "sites_recorded": len(table.sites),
+            "missing": missing}

@@ -3,6 +3,18 @@ cache, greedy sampling, continuous-batching-style slot reuse.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 4 --gen-len 16
+
+Quantization precomputation ladder (see quant/linear.py):
+  --prequantize      cache weight quantization once (q/scale/zp/colsum)
+  --per-channel      per-output-channel weight scales
+  --calibrate N      run N calibration batches through the decode path
+                     and fix STATIC per-layer activation scales (drops
+                     the per-token min/max reduction from the step)
+  --plan FILE        load a DesignPlan (repro.calib.plan / scripts/
+                     make_plan.sh) and serve a per-layer MIXED-design
+                     decode: each scanned layer gathers its own
+                     design's delta table
+--calibrate and --plan imply --prequantize (the caches they attach to).
 """
 from __future__ import annotations
 
@@ -17,6 +29,54 @@ from repro import configs
 from repro.models import transformer as T
 from repro.quant import QuantConfig
 from repro.train import make_serve_step
+
+
+def _calibration_prompts(cfg, rng, batches: int, requests: int,
+                         prompt_len: int):
+    return [rng.integers(0, cfg.vocab, (requests, prompt_len))
+            .astype(np.int32) for _ in range(batches)]
+
+
+def prepare_params(params, cfg, qcfg, args):
+    """Apply the requested precomputation ladder to a params tree.
+    Returns (params, notes) — notes says what was installed.
+
+    Calibration draws from its OWN rng so enabling --calibrate never
+    shifts the serving-prompt stream (A/B runs with and without it see
+    identical requests)."""
+    from repro.quant import prequantize_weights
+    notes = []
+    wrap = args.prequantize or args.calibrate or args.plan
+    if not wrap:
+        return params, notes
+    params = prequantize_weights(params, qcfg)
+    notes.append("prequantized weights"
+                 + (" (per-channel)" if qcfg.w_per_channel else ""))
+    if args.calibrate:
+        from repro.calib import apply_calibration, calibrate_decode
+        crng = np.random.default_rng(4242)
+        enc_frontend = None
+        if cfg.family == "encdec":
+            enc_frontend = crng.normal(size=(
+                args.requests, 16,
+                cfg.frontend_dim or cfg.d_model)).astype(np.float32)
+        table = None
+        for prompts in _calibration_prompts(cfg, crng, args.calibrate,
+                                            args.requests,
+                                            args.prompt_len):
+            t = calibrate_decode(params, cfg, qcfg, prompts,
+                                 gen_len=2, enc_frontend=enc_frontend)
+            table = t if table is None else table.merge(t)
+        params = apply_calibration(params, table)
+        notes.append(f"static act scales ({len(table.sites)} sites, "
+                     f"{args.calibrate} calib batches)")
+    if args.plan:
+        from repro.calib import DesignPlan, apply_plan
+        plan = DesignPlan.load(args.plan)
+        params = apply_plan(params, plan, qcfg)
+        notes.append(f"design plan {args.plan} "
+                     f"(histogram {plan.histogram()})")
+    return params, notes
 
 
 def main(argv=None):
@@ -37,20 +97,28 @@ def main(argv=None):
                     help="quantize the (static) weights once up front "
                          "instead of per decode step (identical quantized "
                          "values; see quant.prequantize_weights)")
+    ap.add_argument("--per-channel", action="store_true",
+                    help="per-output-channel weight scales")
+    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
+                    help="run N calibration batches and serve with "
+                         "STATIC activation scales (repro.calib)")
+    ap.add_argument("--plan", default=None, metavar="FILE",
+                    help="DesignPlan JSON: per-layer mixed-design decode")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     qcfg = QuantConfig(design=args.design, backend=args.backend,
-                       mode=args.quant_mode)
+                       mode=args.quant_mode,
+                       w_per_channel=args.per_channel)
     B = args.requests
     s_max = args.prompt_len + args.gen_len
 
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    if args.prequantize:
-        from repro.quant import prequantize_weights
-        params = prequantize_weights(params, qcfg)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
+    params, notes = prepare_params(params, cfg, qcfg, args)
+    for n in notes:
+        print(f"[serve] {n}")
 
     enc_out = None
     if cfg.family == "encdec":

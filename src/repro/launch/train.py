@@ -43,6 +43,14 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--design", default="design2")
     ap.add_argument("--backend", default="xla")
+    ap.add_argument("--quant-mode", default="asym_u8",
+                    choices=["asym_u8", "sym_i8"])
+    ap.add_argument("--plan", default=None, metavar="FILE",
+                    help="DesignPlan JSON (repro.calib.plan): QAT "
+                         "through the planned per-layer designs — raw "
+                         "params are wrapped with the plan's delta "
+                         "tables inside the loss, so the optimizer and "
+                         "checkpoints stay on plain float weights")
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -57,7 +65,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    qcfg = QuantConfig(design=args.design, backend=args.backend)
+    qcfg = QuantConfig(design=args.design, backend=args.backend,
+                       mode=args.quant_mode)
     ocfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                      total_steps=args.steps,
                      compress_grads=args.compress_grads)
@@ -71,6 +80,13 @@ def main(argv=None):
 
     with mesh, logical_axis_rules(SINGLE_POD_RULES, sizes):
         params = T.init_params(jax.random.PRNGKey(0), cfg)
+        params_transform = None
+        if args.plan:
+            from repro.calib import DesignPlan, make_plan_injector
+            plan = DesignPlan.load(args.plan)
+            params_transform = make_plan_injector(params, plan, qcfg)
+            print(f"[train] QAT through design plan {args.plan} "
+                  f"(histogram {plan.histogram()})")
         opt_state = opt_mod.init(params, ocfg)
         start = 0
         if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
@@ -81,7 +97,8 @@ def main(argv=None):
 
         step_fn = jax.jit(make_train_step(cfg, qcfg, ocfg,
                                           microbatches=args.microbatches,
-                                          remat=not args.smoke),
+                                          remat=not args.smoke,
+                                          params_transform=params_transform),
                           donate_argnums=(0, 1))
         ewma = None
         for step in range(start, args.steps):

@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.calib.observe import pscan
 from repro.quant import QuantConfig, qdot
 from . import layers
 from .sharding import constrain
@@ -82,7 +83,8 @@ def moe(p, x, qcfg: QuantConfig, *, n_experts: int, top_k: int, kind: str,
         return carry, qdot(h, wd, qcfg)
 
     ins = (xe, p["w_up"], p["w_down"]) + ((p["w_gate"],) if glu else ())
-    _, ye = jax.lax.scan(expert_fn, None, ins)                     # (E, C, D)
+    # pscan == lax.scan unless calibrating (per-expert observer sites)
+    _, ye = pscan(expert_fn, None, ins)                            # (E, C, D)
 
     # combine: scatter-add back to tokens with gate weights
     w = (gate_vals * keep).astype(jnp.float32)                     # (T, k)

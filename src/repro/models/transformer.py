@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib.observe import pscan
 from repro.quant import QuantConfig
 from . import layers, moe as moe_mod, recurrent
 from .sharding import constrain
@@ -256,7 +257,9 @@ def _run_encoder(params, frontend, cfg: ArchConfig, qcfg: QuantConfig):
                            cfg.mlp_kind)
         return x, None
 
-    x, _ = jax.lax.scan(body, x, enc["layers"])
+    # pscan == jax.lax.scan unless a calibration observer is active
+    # (repro.calib unrolls the layer stacks to name per-layer sites)
+    x, _ = pscan(body, x, enc["layers"])
     return layers.rmsnorm(x, enc["norm"])
 
 
@@ -318,7 +321,7 @@ def _decoder_stack(params, x, positions, cfg: ArchConfig, qcfg: QuantConfig,
         from .sharding import remat_active
         if remat_active():
             body = jax.checkpoint(body)
-        (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), xs)
+        (x, aux_total), nc = pscan(body, (x, aux_total), xs)
         new_caches.append(nc)
     return x, new_caches, aux_total
 

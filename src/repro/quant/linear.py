@@ -11,18 +11,39 @@ shardings propagate through quantize (elementwise), the LUT gather
 (batched take — replicated table), and the matmul terms, so the same
 code paths run on the 2x16x16 production mesh (verified by the dry-run).
 
-Weight prequantization: qdot re-derives (q_w, s_w, z_w) from the master
-weights on every call, so a jitted serve step pays full weight
-min/max/round/clip work per decode token.  ``prequantize_weights``
-quantizes a params tree ONCE (outside jit) and wraps each dense weight
-in a ``QuantizedWeight`` pytree; qdot consumes the cached values and the
-per-step graph drops the weight-quantization ops entirely.  The cached
-(q, scale, zp) are value-identical to what on-the-fly quantization
-computes (per scan slice), so outputs agree to float-reduction ULPs —
-the two graph shapes may fuse float sums differently — and greedy decode
-tokens match.  The master weights ride along for the STE/exact branches.
+Precomputation ladder (each rung drops per-call work from the jitted
+decode step; all are carried by ``QuantizedWeight``, a pytree that rides
+jax.lax.scan over stacked layers/experts in lockstep with the weights):
+
+  1. weight prequantization (``prequantize_weights``) — cached
+     (q, scale, zp) + the colsum of q (the zero-point cross term of the
+     asym_u8 decomposition), so a decode step pays no weight min/max/
+     round/clip/reduce work.  Per-tensor or per-output-channel scales
+     (QuantConfig.w_per_channel).
+  2. static activation scales (``repro.calib``: observe -> table ->
+     ``apply_calibration``) — fixed per-layer (scale, zp) for the
+     activation quantizer, dropping the per-token min/max reduction.
+  3. per-layer design plans (``repro.calib.plan``) — a stacked delta
+     LUT (+ mean-field compensation tables) per layer, so the scanned
+     decode body computes exact-MXU-product + delta-gather against its
+     own layer's multiplier design (heterogeneous deployment).
+
+The cached (q, scale, zp) are value-identical to what on-the-fly
+quantization computes (per scan slice), so outputs agree to
+float-reduction ULPs — the two graph shapes may fuse float sums
+differently — and greedy decode tokens match.  The master weights ride
+along for the STE/exact branches.
+
+Calibration observers: ``repro.calib.observe`` installs a process-global
+observer via ``set_observer``; qdot reports (x, site, cfg) for every
+QuantizedWeight-bound call.  Observation runs eagerly with the unit
+scans unrolled (calib.observe.pscan), so the observer sees concrete
+per-layer values and names sites by the weight's tree path + scan
+indices.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -38,24 +59,76 @@ _MF_CACHE: dict = {}
 # deliberately do NOT match.
 _DENSE_KEYS = ("router", "frontend_proj")
 
+# Calibration observer (repro.calib.observe).  None outside calibration
+# passes; when set, qdot reports every QuantizedWeight-bound call.
+_OBSERVER = None
+
+# Stale-cache warning dedup: one warning per (cached, requested) pair
+# per process, not one per call site per trace.
+_STALE_WARNED: set = set()
+
+
+def set_observer(obs) -> None:
+    """Install (or clear, with None) the calibration observer."""
+    global _OBSERVER
+    _OBSERVER = obs
+
+
+def get_observer():
+    return _OBSERVER
+
 
 @jax.tree_util.register_pytree_node_class
 class QuantizedWeight:
-    """A dense weight with its quantization precomputed.
+    """A dense weight with (some of) its quantization precomputed.
 
     Transparent to qdot: pass one where a float (…, K, N) weight went.
     Carries the master weights ``w`` (STE / cfg.enabled=False branches)
-    alongside the cached ``q``/``scale``/``zp``; leading (stacked-layer /
-    expert) axes are preserved so jax.lax.scan slices all fields in
-    lockstep with per-slice scales identical to on-the-fly quantization.
+    alongside optional cached fields; leading (stacked-layer / expert)
+    axes are preserved on every field so jax.lax.scan slices them all in
+    lockstep with per-slice values identical to on-the-fly computation.
+
+    Fields (None = not precomputed; qdot falls back to dynamic work):
+      q, scale, zp  cached weight quantization (zp None for sym_i8);
+                    per-channel scales have shape (…, 1, N)
+      colsum        colsum(q) float32 (…, 1, N) — the asym_u8 zero-point
+                    cross term, cached so decode skips an O(K·N) reduce
+      act_scale/act_zp
+                    calibrated STATIC activation quantizer (…,) — drops
+                    the per-token min/max reduction (repro.calib.static)
+      dlut          per-layer delta table (…, 256, 256) int16/int32 —
+                    the mixed-design plan path: exact product + gather
+                    of THIS layer's design error (repro.calib.plan)
+      comp_r/comp_c/comp_mu
+                    per-layer mean-field compensation tables matching
+                    dlut's designs (used when cfg.compensate)
+
+    Static metadata (pytree aux, preserved by scan/vmap slicing):
+      mode          QuantConfig.mode the cache was built for
+      path          the weight's params-tree path ("units.0.attn.wq") —
+                    the calibration site name
+      per_channel   weight-scale granularity of q/scale/zp
     """
 
-    def __init__(self, w, q, scale, zp, mode: str):
+    def __init__(self, w, q=None, scale=None, zp=None, colsum=None,
+                 act_scale=None, act_zp=None, dlut=None,
+                 comp_r=None, comp_c=None, comp_mu=None,
+                 mode: str = "asym_u8", path: str = "",
+                 per_channel: bool = False):
         self.w = w
         self.q = q
         self.scale = scale
         self.zp = zp          # None for symmetric (sym_i8) quantization
+        self.colsum = colsum
+        self.act_scale = act_scale
+        self.act_zp = act_zp
+        self.dlut = dlut
+        self.comp_r = comp_r
+        self.comp_c = comp_c
+        self.comp_mu = comp_mu
         self.mode = mode
+        self.path = path
+        self.per_channel = per_channel
 
     @property
     def ndim(self):
@@ -65,54 +138,108 @@ class QuantizedWeight:
     def shape(self):
         return self.w.shape
 
+    def replace(self, **kw) -> "QuantizedWeight":
+        d = dict(w=self.w, q=self.q, scale=self.scale, zp=self.zp,
+                 colsum=self.colsum, act_scale=self.act_scale,
+                 act_zp=self.act_zp, dlut=self.dlut, comp_r=self.comp_r,
+                 comp_c=self.comp_c, comp_mu=self.comp_mu, mode=self.mode,
+                 path=self.path, per_channel=self.per_channel)
+        d.update(kw)
+        return QuantizedWeight(**d)
+
     def tree_flatten(self):
-        return (self.w, self.q, self.scale, self.zp), self.mode
+        children = (self.w, self.q, self.scale, self.zp, self.colsum,
+                    self.act_scale, self.act_zp, self.dlut,
+                    self.comp_r, self.comp_c, self.comp_mu)
+        return children, (self.mode, self.path, self.per_channel)
 
     @classmethod
-    def tree_unflatten(cls, mode, children):
-        return cls(*children, mode=mode)
+    def tree_unflatten(cls, aux, children):
+        mode, path, per_channel = aux
+        return cls(*children, mode=mode, path=path, per_channel=per_channel)
 
     def __repr__(self):
+        extras = [k for k in ("act_scale", "dlut")
+                  if getattr(self, k) is not None]
         return (f"QuantizedWeight(shape={tuple(self.w.shape)}, "
-                f"mode={self.mode!r})")
+                f"mode={self.mode!r}, path={self.path!r}, "
+                f"per_channel={self.per_channel}"
+                + (f", +{'/'.join(extras)}" if extras else "") + ")")
 
 
-def _quantize_weight(w: jax.Array, cfg: QuantConfig) -> QuantizedWeight:
+def _weight_axis(w, per_channel: bool):
+    """Quantization reduce axes over the trailing (K, N): all of them
+    (per-tensor — one scale per stacked slice) or K only (per-channel —
+    one scale per output column, shape (…, 1, N))."""
+    if per_channel:
+        return w.ndim - 2
+    return None if w.ndim == 2 else tuple(range(w.ndim - 2, w.ndim))
+
+
+def _quantize_weight(w: jax.Array, cfg: QuantConfig,
+                     path: str = "") -> QuantizedWeight:
     """Quantize over the trailing (K, N) axes; leading axes are stacked
     layers/experts and keep their own scales (matching what on-the-fly
     qdot computes per scan slice)."""
-    axis = None if w.ndim == 2 else tuple(range(w.ndim - 2, w.ndim))
+    axis = _weight_axis(w, cfg.w_per_channel)
     if cfg.signed:
         q, s = quantize_int8(w, axis)
-        return QuantizedWeight(w, q, s, None, cfg.mode)
-    q, s, z = quantize_uint8(w, axis)
-    return QuantizedWeight(w, q, s, z, cfg.mode)
+        zp = colsum = None
+    else:
+        q, s, zp = quantize_uint8(w, axis)
+        colsum = q.sum(axis=-2, keepdims=True).astype(jnp.float32)
+    return QuantizedWeight(w, q, s, zp, colsum=colsum, mode=cfg.mode,
+                           path=path, per_channel=cfg.w_per_channel)
+
+
+def is_dense_weight(k, v) -> bool:
+    """Does params-tree key k with value v flow through qdot?"""
+    return ((k in _DENSE_KEYS or (isinstance(k, str) and k.startswith("w")))
+            and isinstance(v, jax.Array) and v.ndim >= 2
+            and jnp.issubdtype(v.dtype, jnp.floating))
+
+
+def walk_dense(node, fn, path=""):
+    """Rebuild a params tree applying fn(leaf, path) to every qdot-bound
+    dense weight (the shared traversal of prequantize/calib/plan)."""
+    if isinstance(node, dict):
+        return {k: (fn(v, f"{path}.{k}".lstrip("."))
+                    if is_dense_weight(k, v)
+                    else walk_dense(v, fn, f"{path}.{k}".lstrip(".")))
+                for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(walk_dense(v, fn, f"{path}.{i}".lstrip("."))
+                          for i, v in enumerate(node))
+    return node
 
 
 def prequantize_weights(params, cfg: QuantConfig):
     """Return a copy of ``params`` with every qdot-bound dense weight
     wrapped in a QuantizedWeight (call once, outside jit).
 
-    No-op when cfg.enabled is False.  Used by launch/serve.py
-    (--prequantize) to drop per-decode-step weight quantization.
+    Each wrapper records its tree path (the calibration site name used
+    by repro.calib).  No-op when cfg.enabled is False.  Used by
+    launch/serve.py (--prequantize) to drop per-decode-step weight
+    quantization.
     """
     if not cfg.enabled:
         return params
+    return walk_dense(params, lambda v, p: _quantize_weight(v, cfg, p))
 
-    def is_dense(k, v):
-        return ((k in _DENSE_KEYS or k.startswith("w"))
-                and isinstance(v, jax.Array) and v.ndim >= 2
-                and jnp.issubdtype(v.dtype, jnp.floating))
 
-    def walk(node):
-        if isinstance(node, dict):
-            return {k: _quantize_weight(v, cfg) if is_dense(k, v) else walk(v)
-                    for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(walk(v) for v in node)
-        return node
-
-    return walk(params)
+def _warn_stale(pre: QuantizedWeight, cfg: QuantConfig) -> None:
+    key = (pre.mode, pre.per_channel, cfg.mode, cfg.w_per_channel)
+    if key in _STALE_WARNED:
+        return
+    _STALE_WARNED.add(key)
+    warnings.warn(
+        f"QuantizedWeight cache built for mode={pre.mode!r}/"
+        f"per_channel={pre.per_channel} used with "
+        f"QuantConfig(mode={cfg.mode!r}, w_per_channel="
+        f"{cfg.w_per_channel}) (site {pre.path!r}): falling back to "
+        f"requantizing the master weights on EVERY call, which erases "
+        f"the prequantize speedup.  Re-run prequantize_weights with the "
+        f"serving QuantConfig.", stacklevel=3)
 
 
 def _mean_field_tables(design: str, signed: bool = False):
@@ -135,18 +262,57 @@ def _mean_field_tables(design: str, signed: bool = False):
     return jnp.asarray(mu_r), jnp.asarray(mu_c), jnp.float32(mu)
 
 
+def _site_comp_tables(pre, cfg: QuantConfig, signed: bool):
+    """Compensation tables: the per-layer ones attached by a design plan
+    (matching the layer's dlut design) when present, else the static
+    per-design tables."""
+    if pre is not None and pre.comp_r is not None:
+        return (pre.comp_r, pre.comp_c,
+                pre.comp_mu.reshape(()).astype(jnp.float32))
+    return _mean_field_tables(cfg.design, signed=signed)
+
+
+def _wparam(p, per_channel: bool):
+    """Reshape a cached weight-quant parameter for broadcast: a
+    scan-sliced per-tensor (1, 1) scale must broadcast EXACTLY like the
+    on-the-fly scalar so the lowered graph (and its float rounding) is
+    bit-identical; per-channel scales keep their (1, N) column shape."""
+    if p is None:
+        return None
+    if per_channel:
+        return p.reshape(1, p.shape[-1])
+    return p.reshape(())
+
+
+def _delta_prod(qx, qw, dlut, offset: int):
+    """Per-layer mixed-design product: exact int32 matmul + gather of
+    the layer's OWN delta table (the scan-sliced pre.dlut), i.e. the
+    two-stage decomposition with a data-driven stage-2 table.  Reuses
+    the blocked-XLA delta twin, which accepts a traced table."""
+    from repro.kernels import ref
+    lead = qx.shape[:-1]
+    a2 = qx.reshape(-1, qx.shape[-1])
+    out = ref.delta_matmul_ref(a2, qw, dlut, offset=offset)
+    return out.reshape(*lead, qw.shape[-1])
+
+
 def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     """y[..., n] = sum_k approx(x[..., k], w[k, n])  (dequantized float32).
 
     x: (..., K) float; w: (K, N) float master weights, or a
-    QuantizedWeight (prequantize_weights) to skip per-call weight
-    quantization.
+    QuantizedWeight (prequantize_weights / repro.calib) carrying any of:
+    cached weight quantization, calibrated static activation scales, a
+    per-layer design plan (delta table).
     """
     pre = w if isinstance(w, QuantizedWeight) else None
     if pre is not None:
         w = pre.w
-        if pre.mode != cfg.mode:   # stale cache: fall back to master
+        if pre.mode != cfg.mode or (
+                pre.q is not None and pre.per_channel != cfg.w_per_channel):
+            _warn_stale(pre, cfg)   # loud: requantizing every step
             pre = None
+    if _OBSERVER is not None and pre is not None:
+        _OBSERVER.record(x, pre, cfg)
     if not cfg.enabled:
         return jnp.matmul(x, w)
     if cfg.signed:
@@ -158,28 +324,49 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     return y_ste + jax.lax.stop_gradient(y - y_ste)
 
 
+def _quantize_act_static(x, pre, lo, hi):
+    """Quantize activations with the calibrated STATIC (scale, zp): no
+    per-token min/max reduction in the decode graph."""
+    sx = pre.act_scale.reshape(())
+    zx = (pre.act_zp.reshape(()) if pre.act_zp is not None
+          else jnp.float32(0.0))
+    qx = jnp.clip(jnp.round(x / sx) + zx, lo, hi).astype(jnp.int32)
+    return qx, sx, zx
+
+
 def _qdot_asym(x, w, cfg, pre=None):
     """Paper-faithful uint8 path: zero-point decomposition around the
     unsigned approximate product."""
-    qx, sx, zx = quantize_uint8(x)
-    if pre is not None:
-        # reshape the cached per-layer scales to 0-d: a scan-sliced (1,1)
-        # scale must broadcast EXACTLY like the on-the-fly scalar so the
-        # lowered graph (and its float rounding) is bit-identical
-        qw, sw, zw = pre.q, pre.scale.reshape(()), pre.zp.reshape(())
+    if pre is not None and pre.act_scale is not None:
+        qx, sx, zx = _quantize_act_static(x, pre, 0, 255)
     else:
-        qw, sw, zw = quantize_uint8(w)
+        qx, sx, zx = quantize_uint8(x)
+    if pre is not None and pre.q is not None:
+        qw = pre.q
+        sw = _wparam(pre.scale, pre.per_channel)
+        zw = _wparam(pre.zp, pre.per_channel)
+        colsum = pre.colsum.reshape(1, pre.colsum.shape[-1]) \
+            if pre.colsum is not None else None
+    else:
+        qw, sw, zw = quantize_uint8(w, _weight_axis(w, cfg.w_per_channel))
+        if cfg.w_per_channel:
+            sw, zw = _wparam(sw, True), _wparam(zw, True)
+        colsum = None
     K = x.shape[-1]
-    prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank)
+    if pre is not None and pre.dlut is not None:
+        prod = _delta_prod(qx, qw, pre.dlut, offset=0)
+    else:
+        prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank)
     prod = prod.astype(jnp.float32)
     if cfg.compensate:
-        mu_r, mu_c, mu = _mean_field_tables(cfg.design)
+        mu_r, mu_c, mu = _site_comp_tables(pre, cfg, signed=False)
         comp = (jnp.take(mu_r, qx, axis=0).sum(-1, keepdims=True)
                 + jnp.take(mu_c, qw, axis=0).sum(0, keepdims=True)
                 - K * mu)
         prod = prod - comp
     rowsum = qx.sum(axis=-1, keepdims=True).astype(jnp.float32)    # (..., 1)
-    colsum = qw.sum(axis=0, keepdims=True).astype(jnp.float32)     # (1, N)
+    if colsum is None:
+        colsum = qw.sum(axis=0, keepdims=True).astype(jnp.float32)  # (1, N)
     y = prod - zw * rowsum - zx * colsum + K * zx * zw
     return y * (sx * sw)
 
@@ -187,17 +374,25 @@ def _qdot_asym(x, w, cfg, pre=None):
 def _qdot_signed(x, w, cfg, pre=None):
     """Symmetric int8 hot path: Q_x ⊗_signed Q_w straight through the
     signed backend — no zero-point cross-term matmuls."""
-    qx, sx = quantize_int8(x)
-    if pre is not None:
-        qw, sw = pre.q, pre.scale.reshape(())  # 0-d: see _qdot_asym
+    if pre is not None and pre.act_scale is not None:
+        qx, sx, _ = _quantize_act_static(x, pre, -128, 127)
     else:
-        qw, sw = quantize_int8(w)
+        qx, sx = quantize_int8(x)
+    if pre is not None and pre.q is not None:
+        qw, sw = pre.q, _wparam(pre.scale, pre.per_channel)
+    else:
+        qw, sw = quantize_int8(w, _weight_axis(w, cfg.w_per_channel))
+        if cfg.w_per_channel:
+            sw = _wparam(sw, True)
     K = x.shape[-1]
-    prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank,
-                             True)
+    if pre is not None and pre.dlut is not None:
+        prod = _delta_prod(qx, qw, pre.dlut, offset=128)
+    else:
+        prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank,
+                                 True)
     prod = prod.astype(jnp.float32)
     if cfg.compensate:
-        mu_r, mu_c, mu = _mean_field_tables(cfg.design, signed=True)
+        mu_r, mu_c, mu = _site_comp_tables(pre, cfg, signed=True)
         comp = (jnp.take(mu_r, qx + 128, axis=0).sum(-1, keepdims=True)
                 + jnp.take(mu_c, qw + 128, axis=0).sum(0, keepdims=True)
                 - K * mu)

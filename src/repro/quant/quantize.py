@@ -61,6 +61,12 @@ class QuantConfig:
     # signed multiplier registry — no zero-point cross terms on the hot
     # path; design names resolve in repro.signed.SIGNED_MULTIPLIERS).
     mode: str = "asym_u8"
+    # Weight-scale granularity: per-tensor (one scale per weight matrix /
+    # per stacked slice) or per-output-channel (one scale per column of
+    # the (K, N) weight — the reduction runs over K only).  The integer
+    # product through the approximate multiplier is unchanged; only the
+    # dequantization broadcast differs, so every backend supports it.
+    w_per_channel: bool = False
     # The unembed/logits matmul stays exact by default: emulating the
     # approximate multiplier against a 256k vocab dominates activation
     # memory (measured +273 GiB/dev on nemotron — §Perf A3) and real

@@ -24,18 +24,26 @@ from . import optimizer as opt_mod
 from .optimizer import OptConfig
 
 
-def make_loss_fn(cfg: ArchConfig, qcfg: QuantConfig, remat: bool = False):
+def make_loss_fn(cfg: ArchConfig, qcfg: QuantConfig, remat: bool = False,
+                 params_transform=None):
+    """params_transform: optional pure fn applied to params inside the
+    loss (e.g. calib.plan.make_plan_injector wrapping raw weights with
+    per-layer design tables) — autodiff sees through it, so grads and
+    the optimizer tree stay on the raw leaves."""
     from repro.models.sharding import remat_scope
 
     def loss_fn(params, batch):
+        if params_transform is not None:
+            params = params_transform(params)
         with remat_scope(remat):
             return T.forward_train(params, batch, cfg, qcfg)
     return loss_fn
 
 
 def make_train_step(cfg: ArchConfig, qcfg: QuantConfig, ocfg: OptConfig,
-                    microbatches: int = 1, remat: bool = True):
-    loss_fn = make_loss_fn(cfg, qcfg, remat)
+                    microbatches: int = 1, remat: bool = True,
+                    params_transform=None):
+    loss_fn = make_loss_fn(cfg, qcfg, remat, params_transform)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(params, opt_state, batch):

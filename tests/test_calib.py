@@ -1,0 +1,310 @@
+"""Tests for the calibration & design-planning subsystem (repro.calib):
+observer determinism, static-vs-dynamic scale equivalence on held-out
+batches, per-channel qdot bit-exactness vs a per-channel reference
+loop, DesignPlan round-trip serialization, mixed-design decode."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.calib import (CalibrationTable, DesignPlan, apply_calibration,
+                         apply_plan, calibrate, coverage,
+                         make_plan_injector, plan_designs,
+                         recompose16_frontier)
+from repro.calib.plan import _comp_tables
+from repro.models import transformer as T
+from repro.quant import QuantConfig, prequantize_weights, qdot
+from repro.quant import linear as qlin
+from repro.quant.quantize import quantize_int8
+
+ARCH = "qwen3-1.7b"
+
+
+def _batches(cfg, n=2, seed0=0):
+    return [configs.make_smoke_batch(cfg, 2, 16, seed=seed0 + i)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def calib_setup():
+    cfg = configs.get_smoke(ARCH)
+    qcfg = QuantConfig(design="design2", backend="xla", mode="sym_i8")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    pparams = prequantize_weights(params, qcfg)
+    table = calibrate(pparams, cfg, qcfg, _batches(cfg))
+    return cfg, qcfg, params, pparams, table
+
+
+def test_observer_pass_is_deterministic(calib_setup):
+    cfg, qcfg, _, pparams, table = calib_setup
+    table2 = calibrate(pparams, cfg, qcfg, _batches(cfg))
+    assert table.to_json() == table2.to_json()
+
+
+def test_observer_covers_every_site(calib_setup):
+    _, _, _, pparams, table = calib_setup
+    cov = coverage(pparams, table)
+    assert cov["missing"] == []
+    assert cov["sites_recorded"] == cov["sites_expected"]
+    # per-layer sites: stacked weights appear once per layer slice
+    assert any(k.endswith("@0") for k in table.sites)
+    assert any(k.endswith("@1") for k in table.sites)
+
+
+def test_calibration_table_roundtrip(calib_setup, tmp_path):
+    *_, table = calib_setup
+    p = tmp_path / "table.json"
+    table.save(str(p))
+    loaded = CalibrationTable.load(str(p))
+    assert loaded.to_json() == table.to_json()
+
+
+def test_static_scales_match_dynamic_on_heldout(calib_setup):
+    """Static activation scales (calibrated on batches 0-1) reproduce
+    dynamic quantization on a held-out batch within tolerance: the
+    quantizers differ only by where the 256-entry grid sits."""
+    cfg, qcfg, params, pparams, table = calib_setup
+    sparams = apply_calibration(pparams, table)
+    held_out = {k: jnp.asarray(v) for k, v in
+                configs.make_smoke_batch(cfg, 2, 16, seed=99).items()}
+    loss_dyn, _ = T.forward_train(pparams, held_out, cfg, qcfg)
+    loss_sta, _ = T.forward_train(sparams, held_out, cfg, qcfg)
+    assert abs(float(loss_dyn) - float(loss_sta)) < 0.05 * float(loss_dyn)
+
+    # decode regime: calibrate on decode-shaped batches (prompt A),
+    # evaluate on a held-out prompt B — logits stay close
+    from repro.calib import calibrate_decode
+    rng = np.random.default_rng(0)
+    cal_prompts = rng.integers(0, cfg.vocab, (2, 4)).astype(np.int32)
+    dtable = calibrate_decode(pparams, cfg, qcfg, cal_prompts, gen_len=2)
+    dparams = apply_calibration(pparams, dtable)
+    eval_prompts = np.random.default_rng(99).integers(
+        0, cfg.vocab, (2, 4)).astype(np.int32)
+    step = jax.jit(lambda p, s, t: T.forward_decode(p, s, t, cfg, qcfg))
+
+    def run(p):
+        st = T.init_decode_state(cfg, 2, 8)
+        for i in range(4):
+            logits, st = step(p, st, jnp.asarray(eval_prompts[:, i:i + 1]))
+        return np.asarray(logits)
+
+    exact_step = jax.jit(lambda p, s, t: T.forward_decode(
+        p, s, t, cfg, QuantConfig(design="exact")))
+
+    def run_exact(p):
+        st = T.init_decode_state(cfg, 2, 8)
+        for i in range(4):
+            logits, st = exact_step(p, st,
+                                    jnp.asarray(eval_prompts[:, i:i + 1]))
+        return np.asarray(logits)
+
+    ld, ls, le = run(pparams), run(dparams), run_exact(params)
+    # greedy-equivalent, strongly correlated, and no quality loss vs the
+    # exact-fp reference beyond the approximate multiplier's own noise
+    assert (ld.argmax(-1) == ls.argmax(-1)).all()
+    assert np.corrcoef(ld.ravel(), ls.ravel())[0, 1] > 0.9
+    err_dyn = np.abs(ld - le).mean() / np.abs(le).mean()
+    err_sta = np.abs(ls - le).mean() / np.abs(le).mean()
+    assert err_sta < 1.2 * err_dyn, (err_sta, err_dyn)
+
+
+def test_static_decode_graph_drops_act_reduction(calib_setup):
+    """Structural: the static-scale decode jaxpr is strictly smaller
+    than the dynamic-prequant one (the per-token min/max reduction and
+    its scale arithmetic disappear)."""
+    cfg, qcfg, _, pparams, table = calib_setup
+    sparams = apply_calibration(pparams, table)
+    from repro.train import make_serve_step
+    step = make_serve_step(cfg, qcfg)
+    st = T.init_decode_state(cfg, 2, 4)
+    tok = jnp.full((2, 1), 7, jnp.int32)
+    j_dyn = str(jax.make_jaxpr(step)(pparams, st, tok))
+    j_sta = str(jax.make_jaxpr(step)(sparams, st, tok))
+    assert len(j_sta) < len(j_dyn)
+    assert j_dyn.count("reduce_max") > j_sta.count("reduce_max")
+
+
+def test_per_channel_qdot_bitexact_vs_reference_loop():
+    """Per-channel symmetric qdot == a per-output-channel reference
+    loop: quantize each weight column with its own scale, push the
+    integers through the signed product LUT, dequantize per column."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(8, 32)).astype(np.float32)
+    w = (rng.normal(size=(32, 16)) * np.logspace(-2, 0, 16)).astype(
+        np.float32)          # wildly different column magnitudes
+    cfg = QuantConfig(design="design2", backend="xla", mode="sym_i8",
+                      compensate=False, w_per_channel=True)
+    y = np.asarray(qdot(jnp.asarray(x), jnp.asarray(w), cfg))
+
+    qx, sx = quantize_int8(jnp.asarray(x))
+    qx = np.asarray(qx)
+    slut = ops.get_signed_lut("design2")
+    y_ref = np.zeros((8, 16), np.float64)
+    for n in range(16):
+        qn, sn = quantize_int8(jnp.asarray(w[:, n]))
+        qn = np.asarray(qn)
+        prod = slut[qx + 128][:, np.arange(32), qn + 128].sum(-1)
+        y_ref[:, n] = prod * float(sx) * float(sn)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-6)
+
+    # prequantized per-channel cache agrees with the on-the-fly path
+    pre = qlin._quantize_weight(jnp.asarray(w), cfg, "w")
+    assert pre.scale.shape == (1, 16)
+    y_pre = np.asarray(qdot(jnp.asarray(x), pre, cfg))
+    np.testing.assert_allclose(y_pre, y, rtol=1e-6, atol=1e-7)
+
+
+def test_per_channel_beats_per_tensor_on_skewed_weights():
+    """The quality argument for per-channel scales: columns spanning
+    decades of magnitude quantize poorly under one shared scale."""
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(16, 64)).astype(np.float32)
+    w = (rng.normal(size=(64, 32)) * np.logspace(-3, 0, 32)).astype(
+        np.float32)
+    ref = x @ w
+    err = {}
+    for pc in (False, True):
+        # exact integer backend isolates pure quantization error from
+        # the approximate multiplier's own noise
+        cfg = QuantConfig(design="design2", backend="exact",
+                          mode="sym_i8", w_per_channel=pc,
+                          compensate=False)
+        yq = np.asarray(qdot(jnp.asarray(x), jnp.asarray(w), cfg))
+        err[pc] = np.abs(yq - ref).mean() / np.abs(ref).mean()
+    assert err[True] < 0.5 * err[False], err
+
+
+def test_stale_cache_warns_once():
+    """Satellite fix: a mode-mismatched QuantizedWeight cache used to
+    requantize silently every call; now it warns (once per mismatch
+    kind) and still computes the right thing."""
+    qlin._STALE_WARNED.clear()
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    cfg_asym = QuantConfig(design="design2", backend="xla", mode="asym_u8")
+    cfg_sym = QuantConfig(design="design2", backend="xla", mode="sym_i8")
+    pre = qlin._quantize_weight(w, cfg_asym, "w")
+    with pytest.warns(UserWarning, match="erases"):
+        y = qdot(x, pre, cfg_sym)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(qdot(x, w, cfg_sym)),
+                               rtol=1e-6, atol=1e-7)
+    # second use: already warned, stays quiet
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        qdot(x, pre, cfg_sym)
+
+
+def test_design_plan_roundtrip(calib_setup, tmp_path):
+    cfg, qcfg, _, _, table = calib_setup
+    plan = plan_designs(table, qcfg, arch=ARCH)
+    plan.recompose16 = recompose16_frontier(("exact", "design2"),
+                                            n_samples=1 << 10)
+    p = tmp_path / "plan.json"
+    plan.save(str(p))
+    loaded = DesignPlan.load(str(p))
+    assert loaded.to_json() == plan.to_json()
+    assert loaded.layers == plan.layers
+    # the frontier always contains non-dominated rows
+    assert any(r["on_frontier"] for r in loaded.frontier)
+    assert any(r["on_frontier"] for r in loaded.recompose16)
+
+
+def test_mixed_design_qdot_matches_uniform_backend():
+    """The per-layer dlut path is the SAME two-stage decomposition as
+    the delta_xla backend, so a dlut of design1 attached to a
+    design2-config qdot must reproduce the uniform design1 run
+    bit-for-bit."""
+    from repro.core import lut as lutmod
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    cfg2 = QuantConfig(design="design2", backend="delta_xla",
+                       mode="sym_i8")
+    cfg1 = QuantConfig(design="design1", backend="delta_xla",
+                       mode="sym_i8")
+    pre = qlin._quantize_weight(w, cfg2, "w")
+    cr, cc, cm = _comp_tables("design1", True)
+    pre_planned = pre.replace(
+        dlut=jnp.asarray(lutmod.build_delta_lut("design1", True)),
+        comp_r=jnp.asarray(cr), comp_c=jnp.asarray(cc),
+        comp_mu=jnp.asarray(cm))
+    y_plan = np.asarray(qdot(x, pre_planned, cfg2))   # design2 cfg!
+    y_uni = np.asarray(qdot(x, pre, cfg1))
+    np.testing.assert_array_equal(y_plan, y_uni)
+
+
+def test_apply_plan_mixed_decode_runs(calib_setup):
+    """A heterogeneous per-layer plan decodes end-to-end under the
+    jitted scan (stacked delta tables slice per layer)."""
+    cfg, qcfg, _, pparams, table = calib_setup
+    plan = plan_designs(table, qcfg, arch=ARCH)
+    # force real heterogeneity across the two stacked layers
+    for key in plan.layers:
+        plan.layers[key] = "design1" if key.endswith("@0") else "design2"
+    mparams = apply_plan(apply_calibration(pparams, table), plan, qcfg)
+    step = jax.jit(lambda p, s, t: T.forward_decode(p, s, t, cfg, qcfg))
+    st = T.init_decode_state(cfg, 2, 4)
+    logits, _ = step(mparams, st, jnp.full((2, 1), 7, jnp.int32))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_apply_plan_rejects_mismatched_plan(calib_setup):
+    """A plan built for another arch/size (no matching site keys) must
+    not silently serve plan.default everywhere."""
+    cfg, qcfg, _, pparams, table = calib_setup
+    stray = DesignPlan(arch="other", mode=qcfg.mode, default="design2",
+                       layers={"units.9.attn.bogus@0": "design1"})
+    with pytest.raises(KeyError, match="not in the design plan"):
+        apply_plan(pparams, stray, qcfg)
+    with pytest.warns(UserWarning, match="not in the design plan"):
+        apply_plan(pparams, stray, qcfg, strict=False)
+
+
+def test_train_plan_injector_keeps_raw_params(calib_setup):
+    """QAT through a plan: the injector wraps inside the loss, so the
+    optimizer tree stays raw floats and a step actually trains."""
+    from repro.train import OptConfig, make_train_step
+    from repro.train import optimizer as opt_mod
+    cfg, qcfg, params, _, table = calib_setup
+    plan = plan_designs(table, qcfg, arch=ARCH)
+    inject = make_plan_injector(params, plan, qcfg)
+    ocfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=2)
+    step_fn = jax.jit(make_train_step(cfg, qcfg, ocfg, remat=False,
+                                      params_transform=inject))
+    opt_state = opt_mod.init(params, ocfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             configs.make_smoke_batch(cfg, 2, 16).items()}
+    new_params, _, metrics = step_fn(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert not any(isinstance(v, qlin.QuantizedWeight)
+                   for v in jax.tree.leaves(
+                       new_params, is_leaf=lambda n: isinstance(
+                           n, qlin.QuantizedWeight)))
+
+
+def test_serve_cli_plan_end_to_end(tmp_path):
+    """launch/serve.py --plan: calibrate -> plan CLI -> mixed-design
+    serve (the ISSUE-3 acceptance path)."""
+    from repro.calib import plan as plan_cli
+    from repro.launch import serve
+    plan_path = tmp_path / "plan.json"
+    plan_cli.main(["--arch", ARCH, "--smoke", "--batches", "1",
+                   "--quant-mode", "sym_i8", "--no-recompose16",
+                   "--out", str(plan_path)])
+    d = json.load(open(plan_path))
+    assert d["kind"] == "DesignPlan" and d["layers"]
+    out, logits = serve.main(
+        ["--arch", ARCH, "--smoke", "--requests", "2", "--prompt-len",
+         "3", "--gen-len", "4", "--quant-mode", "sym_i8", "--calibrate",
+         "1", "--plan", str(plan_path)])
+    cfg = configs.get_smoke(ARCH)
+    assert out.shape == (2, 4)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+    assert np.isfinite(logits).all()
