@@ -10,8 +10,10 @@ Cells (selection rationale in EXPERIMENTS.md):
   C qwen3-1.7b     train_4k    — paper-technique cell (backend sweep)
 
 Also hosts the delta-kernel block-shape autotuner (``--autotune-delta``):
-sweeps (TM, TN, TK) for kernels.approx_matmul.delta_matmul on a fixed
-matmul shape and records the winner to experiments/delta_autotune.json.
+sweeps (TM, TN, TK) for kernels.approx_matmul.delta_matmul AND the
+fused serving kernel's (TM, TN, TK, TKsub) space (ops.fused_qdot, per
+quant mode) on a fixed matmul shape, recording the winners to
+experiments/delta_autotune.json.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.perf_hillclimb --iter A1 [A2 ...]
@@ -36,6 +38,10 @@ DELTA_BLOCK_CANDIDATES = [
 
 
 DELTA_REF_KB_CANDIDATES = [8, 16, 32, 64]
+
+# K-subtile sizes for the stage-2 gather loop: the live index surface is
+# TM*TKsub*TN * 2 B, so 32 at 128x128 out tiles is a 1 MiB gather buffer.
+FUSED_KSUB_CANDIDATES = [16, 32, 64, 128]
 
 
 def autotune_delta(shape=(256, 256, 256), design: str = "design2",
@@ -115,6 +121,101 @@ def autotune_delta(shape=(256, 256, 256), design: str = "design2",
     return record
 
 
+def autotune_fused(shape=(256, 256, 256), design: str = "design2",
+                   out: str = "experiments/delta_autotune.json"):
+    """Learn the fused serving kernel's (TM, TN, TK, TKsub) space per
+    quant mode (asym_u8 / sym_i8) and the XLA twin's k_block, recording
+    the winners to ``out``.  Off-TPU the Pallas sweep runs in interpret
+    mode — the relative tile ordering is the point; re-run on hardware
+    for real numbers."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+
+    if __package__:
+        from .run import bench_us
+    else:
+        from run import bench_us
+
+    M, K, N = shape
+    rng = np.random.default_rng(0)
+    xnp = rng.normal(size=(M, K)).astype(np.float32)
+    x = jnp.asarray(xnp)
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    records = []
+    for mode in ("asym_u8", "sym_i8"):
+        # static quantizers computed the real pipeline's way
+        # (repro.quant.quantize), so the sweep sees the operand
+        # distribution serving actually produces
+        from repro.quant.quantize import quantize_int8, quantize_uint8
+        signed = mode == "sym_i8"
+        if signed:
+            qw, sw_a = quantize_int8(w)
+            sw = float(sw_a)
+            zx = zw = colsum = None
+            sx = max(float(np.abs(xnp).max()) / 127.0, 1e-8)
+        else:
+            qw, sw_a, zw_a = quantize_uint8(w)
+            sw, zw = float(sw_a), float(zw_a)
+            colsum = np.asarray(qw).sum(0).astype(np.float32)
+            lo, hi = float(xnp.min()), float(xnp.max())
+            sx = max((hi - lo) / 255.0, 1e-8)
+            zx = float(np.clip(np.round(-lo / sx), 0, 255))
+        dlut = jnp.asarray(ops.get_delta_lut(design, signed))
+
+        def fused(lowering, **kw):
+            return jax.jit(lambda x, qw: ops.fused_qdot(
+                x, qw, dlut, sx=sx, zx=zx, sw=sw, zw=zw, colsum=colsum,
+                signed=signed, lowering=lowering, **kw))
+
+        blocks = [blk for blk in DELTA_BLOCK_CANDIDATES
+                  if blk[0] <= M and blk[1] <= N and blk[2] <= K] \
+            or [min(DELTA_BLOCK_CANDIDATES,
+                    key=lambda blk: blk[0] * blk[1] * blk[2])]
+        pallas_results = []
+        for block in blocks:
+            for ks in [k for k in FUSED_KSUB_CANDIDATES
+                       if k <= block[2] and block[2] % k == 0]:
+                f = fused("pallas", block=block, k_sub=ks)
+                us = bench_us(lambda: f(x, qw), reps=3)
+                pallas_results.append({"block": list(block), "k_sub": ks,
+                                       "us_per_call": round(us, 1)})
+                print(f"  fused[{mode}] pallas block={block} "
+                      f"k_sub={ks}: {us:.0f} us")
+        kbs = [kb for kb in DELTA_REF_KB_CANDIDATES if K % kb == 0] \
+            or [next(kb for kb in (32, 16, 8, 4, 2, 1) if K % kb == 0)]
+        xla_results = []
+        for kb in kbs:
+            f = fused("xla", k_block=kb)
+            us = bench_us(lambda: f(x, qw), reps=3)
+            xla_results.append({"k_block": kb, "us_per_call": round(us, 1)})
+            print(f"  fused[{mode}] xla k_block={kb}: {us:.0f} us")
+        rec = {
+            "kind": "fused", "shape": list(shape), "design": design,
+            "mode": mode,
+            "pallas": {"results": pallas_results,
+                       "best": min(pallas_results,
+                                   key=lambda r: r["us_per_call"])},
+            "xla": {"results": xla_results,
+                    "best": min(xla_results,
+                                key=lambda r: r["us_per_call"])},
+        }
+        records.append(rec)
+        pb = rec["pallas"]["best"]
+        print(f"[autotune] fused {mode} {design} {M}x{K}x{N}: pallas best="
+              f"{tuple(pb['block'])} k_sub={pb['k_sub']} "
+              f"({pb['us_per_call']:.0f} us), xla best "
+              f"kb={rec['xla']['best']['k_block']} "
+              f"({rec['xla']['best']['us_per_call']:.0f} us)")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    hist = json.load(open(out)) if os.path.exists(out) else []
+    hist.extend(records)
+    json.dump(hist, open(out, "w"), indent=1)
+    print(f"[autotune] fused winners appended -> {out}")
+    return records
+
+
 def run_iteration(tag: str):
     # import inside so XLA_FLAGS from dryrun module applies first
     from repro.launch import dryrun
@@ -188,9 +289,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--iter", nargs="+", default=[])
     ap.add_argument("--autotune-delta", action="store_true",
-                    help="sweep delta_matmul (TM,TN,TK) block shapes and "
-                         "record the winner to experiments/delta_autotune"
-                         ".json")
+                    help="sweep delta_matmul (TM,TN,TK) block shapes AND "
+                         "the fused kernel's (TM,TN,TK,TKsub) space per "
+                         "quant mode; record winners to experiments/"
+                         "delta_autotune.json")
     ap.add_argument("--shape", default="256,256,256",
                     help="M,K,N for --autotune-delta")
     ap.add_argument("--signed", action="store_true",
@@ -201,5 +303,6 @@ if __name__ == "__main__":
     for tag in args.iter:
         run_iteration(tag)
     if args.autotune_delta:
-        autotune_delta(tuple(int(x) for x in args.shape.split(",")),
-                       signed=args.signed)
+        shape = tuple(int(x) for x in args.shape.split(","))
+        autotune_delta(shape, signed=args.signed)
+        autotune_fused(shape)

@@ -2,12 +2,16 @@
 micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV summary lines
 plus the full per-table CSVs.  ``--json`` additionally writes the
 machine-readable kernel/qdot rows to BENCH_kernels.json so later PRs
-have a perf baseline to diff against (CI uploads it as an artifact)."""
+have a perf baseline to diff against (CI uploads it as an artifact);
+``--check-regression`` diffs a fresh run against that committed
+baseline (warn-only on CPU runners, hard-fails on TPU)."""
 from __future__ import annotations
 
 import csv
 import io
 import json
+import os
+import statistics
 import sys
 import time
 
@@ -28,17 +32,25 @@ def _csv(rows) -> str:
     return buf.getvalue()
 
 
-def bench_us(fn, reps: int = 7) -> float:
-    """Wall time of fn in microseconds, min-of-reps (robust to scheduler
-    noise; call once to compile before timing)."""
+def bench_stats(fn, reps: int = 7) -> dict:
+    """Wall time of fn in microseconds over ``reps`` timed calls (one
+    untimed compile call first): {'min_us', 'median_us'}.  The min is
+    the headline metric (robust to scheduler noise); the median is what
+    --check-regression compares, being stabler run-to-run."""
     import jax
     fn()  # compile
-    best = float("inf")
+    ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+        ts.append(time.perf_counter() - t0)
+    return {"min_us": min(ts) * 1e6,
+            "median_us": statistics.median(ts) * 1e6}
+
+
+def bench_us(fn, reps: int = 7) -> float:
+    """Min-of-reps wall microseconds (see bench_stats)."""
+    return bench_stats(fn, reps)["min_us"]
 
 
 def kernel_microbench():
@@ -63,7 +75,9 @@ def kernel_microbench():
     rows = []
 
     def timed(name, fn):
-        rows.append({"kernel": name, "us_per_call": round(bench_us(fn), 1),
+        st = bench_stats(fn)
+        rows.append({"kernel": name, "us_per_call": round(st["min_us"], 1),
+                     "us_median": round(st["median_us"], 1),
                      "shape": "256x256x256"})
 
     timed("exact_matmul", lambda: ref.exact_matmul_ref(a, b))
@@ -83,6 +97,36 @@ def kernel_microbench():
     timed("delta_xla_raw", lambda: f_ref(a, b))
     timed("lut_pallas_legacy_raw", lambda: lut_matmul(a, b, lut))
     timed("delta_pallas_interpret_raw", lambda: delta_matmul(a, b, dlut))
+    # the fused serving kernel at microbench scale: float x in, f32 out
+    # (static scales + dequant epilogue on top of the delta core)
+    x = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    f_fused = jax.jit(lambda x, b: ops.fused_qdot(
+        x, b, dlut, sx=0.01, zx=128.0, sw=0.01, zw=128.0,
+        colsum=b.sum(0).astype(jnp.float32), lowering="xla"))
+    timed("fused_qdot_xla", lambda: f_fused(x, b))
+
+    # serving-PIPELINE A/B at compute scale, through qdot itself: the
+    # unfused static path as PR 3 served it (xla product backend + STE
+    # matmul + per-call compensation gathers) vs the same datapath
+    # through delta_xla, vs the fused kernel (backend='fused' +
+    # inference).  This is the fused-datapath win without the tiny
+    # smoke model's fixed decode-step floor on top (see serve_decode).
+    import dataclasses
+
+    from repro.quant import QuantConfig, prequantize_weights, qdot
+    w = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    base = QuantConfig(design="design2", backend="xla", mode="sym_i8")
+    pre = prequantize_weights({"w": w}, base)["w"]
+    sx = float(np.abs(np.asarray(x)).max() / 127.0)
+    pre = pre.replace(act_scale=jnp.float32(sx))
+    for name, backend, inference in (
+            ("qdot_static_xla", "xla", False),
+            ("qdot_static_delta_xla", "delta_xla", False),
+            ("qdot_static_fused", "fused", True)):
+        cfg = dataclasses.replace(base, backend=backend,
+                                  inference=inference)
+        f = jax.jit(lambda x, p=pre, c=cfg: qdot(x, p, c))
+        timed(name, lambda: f(x))
     return rows
 
 
@@ -124,15 +168,20 @@ def qdot_mode_bench():
 def serve_decode_bench():
     """Decode-step wall time across the quantization precomputation
     ladder (quant/linear.py): dynamic -> prequantized weights ->
-    +calibrated static activation scales -> +per-layer design plan.
-    min-of-7 single-step timing through the jitted serve step on the
-    smoke config; the static-scale rows are the ISSUE-3 acceptance
-    numbers (static decode vs dynamic quantization)."""
+    +calibrated static activation scales -> +per-layer design plan,
+    then the FUSED serving path on the static and plan trees (backend
+    'fused' + inference mode — what launch/serve.py defaults to with
+    --calibrate/--plan).  min-of-7 over 10-step windows through the
+    jitted serve step on the smoke config; the fused rows vs the
+    static/plan rows are the ISSUE-4 acceptance numbers."""
+    import dataclasses
+
     import jax
     import numpy as np
     from repro import configs
     from repro.calib import (apply_calibration, apply_plan,
-                             calibrate_decode, plan_designs)
+                             attach_comp_cols, calibrate_decode,
+                             plan_designs)
     from repro.models import transformer as T
     from repro.quant import QuantConfig, prequantize_weights
     from repro.train import make_serve_step
@@ -142,6 +191,7 @@ def serve_decode_bench():
     rows = []
     for mode in ("asym_u8", "sym_i8"):
         qcfg = QuantConfig(design="design2", backend="xla", mode=mode)
+        qfused = dataclasses.replace(qcfg, backend="fused", inference=True)
         params = T.init_params(jax.random.PRNGKey(0), cfg)
         pp = prequantize_weights(params, qcfg)
         prompts = np.random.default_rng(0).integers(
@@ -150,30 +200,87 @@ def serve_decode_bench():
         sp = apply_calibration(pp, table)
         plan = plan_designs(table, qcfg, arch="qwen3-1.7b")
         mp = apply_plan(sp, plan, qcfg)
+        spf = attach_comp_cols(sp, qfused)
+        mpf = apply_plan(spf, plan, qfused)
         step = jax.jit(make_serve_step(cfg, qcfg))
+        step_fused = jax.jit(make_serve_step(cfg, qfused))
         base = None
-        for name, ps in (("dynamic", params), ("prequant", pp),
-                         ("prequant+static", sp),
-                         ("prequant+static+plan", mp)):
+        timings = {}
+        for name, ps, stp in (("dynamic", params, step),
+                              ("prequant", pp, step),
+                              ("prequant+static", sp, step),
+                              ("prequant+static+plan", mp, step),
+                              ("prequant+static+fused", spf, step_fused),
+                              ("prequant+static+plan+fused", mpf,
+                               step_fused)):
             st = T.init_decode_state(cfg, B, P + 16)
             tok = jax.numpy.full((B, 1), 5, jax.numpy.int32)
 
             # single decode steps are ~1 ms on this container: time a
             # 10-step window per sample (state not donated, so every
             # call is identical work) and report the per-step min-of-7
-            def window(ps=ps, st=st, tok=tok):
+            def window(ps=ps, st=st, tok=tok, stp=stp):
                 for _ in range(10):
-                    out = step(ps, st, tok)
+                    out = stp(ps, st, tok)
                 return out
 
-            us = bench_us(window) / 10.0
+            stats = bench_stats(window)
+            us = stats["min_us"] / 10.0
             base = base if base is not None else us
-            rows.append({"config": name, "mode": mode,
-                         "us_per_step": round(us, 1),
-                         "speedup_vs_dynamic": round(base / us, 2),
-                         "shape": f"B{B}_{cfg.name}"})
-        rows[-1]["plan_histogram"] = str(plan.histogram())
+            timings[name] = us
+            row = {"config": name, "mode": mode,
+                   "us_per_step": round(us, 1),
+                   "us_median": round(stats["median_us"] / 10.0, 1),
+                   "speedup_vs_dynamic": round(base / us, 2),
+                   "shape": f"B{B}_{cfg.name}"}
+            if name.endswith("+fused"):
+                # the fused-vs-unfused A/B on the same tree
+                row["speedup_vs_unfused"] = round(
+                    timings[name[:-len("+fused")]] / us, 2)
+            if name.endswith("plan") or name.endswith("plan+fused"):
+                row["plan_histogram"] = str(plan.histogram())
+            rows.append(row)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Regression check against the committed baseline
+# ---------------------------------------------------------------------------
+
+# table -> (row-identity fields, headline metric field)
+_REGRESSION_SPEC = {"kernel_microbench": (("kernel",), "us_per_call"),
+                    "serve_decode": (("config", "mode"), "us_per_step")}
+
+
+def compare_to_baseline(baseline: dict, fresh: dict, tol: float):
+    """Diff fresh kernel_microbench/serve_decode rows against a
+    committed BENCH_kernels.json payload.  Rows are matched by identity
+    fields; the comparison metric is the median when both sides carry
+    one (stabler run-to-run), else the headline min.  Returns (report,
+    regressions): regressions are rows whose fresh/baseline ratio
+    exceeds ``tol``."""
+    report, regressions = [], []
+    for table, (keys, metric) in _REGRESSION_SPEC.items():
+        base = {tuple(r.get(k) for k in keys): r
+                for r in baseline.get("benchmarks", {}).get(table, [])}
+        for r in fresh.get(table, []):
+            b = base.get(tuple(r.get(k) for k in keys))
+            if b is None:
+                continue     # new row — nothing to regress against
+            if "us_median" in b and "us_median" in r:
+                bv, fv = b["us_median"], r["us_median"]
+            else:
+                bv, fv = b.get(metric), r.get(metric)
+            if not bv or not fv:
+                continue
+            row = {"table": table,
+                   "row": "/".join(str(r.get(k)) for k in keys),
+                   "baseline_us": round(bv, 1), "fresh_us": round(fv, 1),
+                   "ratio": round(fv / bv, 2)}
+            report.append(row)
+            if fv / bv > tol:
+                regressions.append(row)
+    return report, regressions
 
 
 def main(argv=None) -> None:
@@ -192,7 +299,28 @@ def main(argv=None) -> None:
                     help="also write the kernel_microbench/qdot_modes rows "
                          "as JSON (default path: BENCH_kernels.json) — the "
                          "machine-readable perf trajectory CI archives")
+    ap.add_argument("--check-regression", nargs="?",
+                    const="BENCH_kernels.json", default=None,
+                    metavar="BASELINE",
+                    help="compare fresh kernel_microbench/serve_decode "
+                         "medians against a committed baseline JSON "
+                         "(default BENCH_kernels.json, read BEFORE --json "
+                         "overwrites it).  Hard-fails on TPU runners or "
+                         "with REPRO_BENCH_STRICT=1; warn-only on CPU "
+                         "(container timing is too noisy to gate on)")
+    ap.add_argument("--regression-tol", type=float, default=1.6,
+                    metavar="RATIO",
+                    help="fresh/baseline ratio above which a row counts "
+                         "as a regression (default 1.6)")
     args = ap.parse_args(argv)
+    baseline = None
+    if args.check_regression:
+        if os.path.exists(args.check_regression):
+            with open(args.check_regression) as fh:
+                baseline = json.load(fh)
+        else:
+            print(f"[regression] no baseline at {args.check_regression}; "
+                  f"skipping the check (first run?)")
     only = set(args.only.split(",")) if args.only else None
     if only:
         known = set(tables.ALL) | {"kernel_microbench", "qdot_modes",
@@ -225,6 +353,28 @@ def main(argv=None) -> None:
             print(f"### {name}")
             print(_csv(rows))
             json_out[name] = rows
+
+    if baseline is not None:
+        report, regressions = compare_to_baseline(baseline, json_out,
+                                                  args.regression_tol)
+        print("### regression_check  (vs "
+              f"{args.check_regression}, tol {args.regression_tol}x)")
+        print(_csv(report))
+        if regressions:
+            import jax
+            strict = (jax.default_backend() == "tpu"
+                      or os.environ.get("REPRO_BENCH_STRICT") == "1")
+            msg = (f"[regression] {len(regressions)} row(s) slower than "
+                   f"{args.regression_tol}x baseline: "
+                   + ", ".join(f"{r['row']} ({r['ratio']}x)"
+                               for r in regressions))
+            if strict:
+                print(msg, file=sys.stderr)
+                sys.exit(1)
+            print(msg + "  (warn-only on this CPU runner)")
+        elif report:
+            print(f"[regression] OK: {len(report)} rows within "
+                  f"{args.regression_tol}x of baseline")
 
     if args.json and not json_out:
         print(f"[json] skipped {args.json}: --only excluded "

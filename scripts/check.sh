@@ -11,8 +11,9 @@ python -m pytest -x -q
 echo "== benchmark CSV smoke =="
 python -m benchmarks.run --only table4_approx,table_signed_multipliers,qdot_modes
 
-echo "== kernel-bench smoke (writes BENCH_kernels.json) =="
-python -m benchmarks.run --only kernel_microbench,qdot_modes,serve_decode --json
+echo "== kernel-bench smoke (regression check vs committed baseline, then writes BENCH_kernels.json) =="
+python -m benchmarks.run --only kernel_microbench,qdot_modes,serve_decode \
+    --json --check-regression
 
 echo "== calibration smoke (writes experiments/design_plan_*.json) =="
 scripts/make_plan.sh qwen3-1.7b

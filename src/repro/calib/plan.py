@@ -297,22 +297,34 @@ def _site_tables(plan: DesignPlan, path: str, lead, *,
     """Stacked per-layer delta LUT + compensation tables for one wrapped
     weight with leading (layer/expert) axes ``lead``.  Site keys absent
     from the plan resolve to plan.default and are appended to
-    ``missing`` so callers can reject a mismatched plan loudly."""
+    ``missing`` so callers can reject a mismatched plan loudly.
+
+    The delta bank is DEDUPLICATED by design: ``dlut`` stacks only the
+    distinct designs this site uses (first-occurrence order) and
+    ``dlut_idx`` maps each layer to its bank row.  Plans are typically
+    far more homogeneous than their layer count (1-3 distinct designs),
+    so the gather working set stays one-or-two 256 KiB tables —
+    cache-resident — instead of layers x 256 KiB."""
     from repro.core import lut as lutmod
     idxs = list(np.ndindex(*lead)) if lead else [()]
     keys = [site_key(path, idx) for idx in idxs]
     if missing is not None:
         missing.extend(k for k in keys if k not in plan.layers)
     designs = [plan.design_for(k) for k in keys]
+    uniq = list(dict.fromkeys(designs))
     dl = np.stack([np.asarray(lutmod.build_delta_lut(d, plan.signed))
-                   for d in designs])
+                   for d in uniq])
+    didx = np.asarray([uniq.index(d) for d in designs],
+                      np.int32).reshape(lead or ())
     cr, cc, cm = zip(*(_comp_tables(d, plan.signed) for d in designs))
     return {
-        "dlut": dl.reshape(*lead, 256, 256),
+        "dlut": dl,                                   # (n_uniq, 256, 256)
+        "dlut_idx": didx,
         "comp_r": np.stack(cr).reshape(*lead, 256),
         "comp_c": np.stack(cc).reshape(*lead, 256),
         "comp_mu": np.asarray(cm, np.float32).reshape(lead or ()),
         "designs": designs,
+        "uniq_designs": uniq,
     }
 
 
@@ -333,18 +345,42 @@ def _check_plan_coverage(plan: DesignPlan, missing: list, n_sites: int,
     warnings.warn(msg)
 
 
+def _bank_key(path: str, plan: DesignPlan, designs) -> str:
+    """Content-addressed registry key for a site's table bank: two plans
+    collide only when they would install identical tables anyway."""
+    return f"{path}|{plan.mode}|{','.join(designs)}"
+
+
+def _plan_dlut_dtype():
+    """int16 on TPU (half the VMEM traffic of the Pallas gather),
+    pre-widened int32 elsewhere: the XLA twins gather from an int32
+    view, and widening a traced table at run time costs a 64Ki-element
+    convert per layer per decode step."""
+    import jax
+    import jax.numpy as jnp
+    return None if jax.default_backend() == "tpu" else jnp.int32
+
+
 def apply_plan(pparams, plan: DesignPlan, qcfg: QuantConfig, *,
                strict: bool = True):
     """Install a DesignPlan on a prequantized (optionally calibrated)
-    params tree: each QuantizedWeight gets its layers' delta LUTs and
-    compensation tables, stacked so the layer scan slices per-layer
-    designs next to the weights.  qdot then computes exact-product +
-    per-layer-delta — the heterogeneous mixed-design decode.
+    params tree: each QuantizedWeight's per-layer delta tables go into a
+    process-level table BANK (quant.linear.register_dlut_bank — the
+    jitted decode body closes over it as ONE constant), and the wrapper
+    carries only the per-layer int32 bank index, stacked so the layer
+    scan slices it next to the weights.  qdot then computes
+    exact-product + per-layer-delta with the layer's table selected by
+    index — the heterogeneous mixed-design decode, with no 256 KiB
+    table slice riding the scan (measured ~60% of the plan-path decode
+    step on CPU before banking).  Compensation tables (small) still
+    ride the scan, plus the precomputed comp_col colsum for the fused
+    epilogue.
 
     strict=True (default) rejects a plan that does not cover this
     model's sites (a plan built on another arch/size would otherwise
     silently serve plan.default everywhere)."""
     import jax.numpy as jnp
+    dlut_dtype = _plan_dlut_dtype()
     if plan.mode != qcfg.mode:
         raise ValueError(f"plan was built for mode {plan.mode!r} but the "
                          f"serving QuantConfig uses {qcfg.mode!r}")
@@ -352,21 +388,33 @@ def apply_plan(pparams, plan: DesignPlan, qcfg: QuantConfig, *,
     n_sites = [0]
 
     def install(node):
-        if isinstance(node, qlin.QuantizedWeight):
-            lead = tuple(int(d) for d in node.w.shape[:-2])
-            n_sites[0] += int(np.prod(lead)) if lead else 1
-            t = _site_tables(plan, node.path, lead, missing=missing)
-            return node.replace(dlut=jnp.asarray(t["dlut"]),
-                                comp_r=jnp.asarray(t["comp_r"]),
-                                comp_c=jnp.asarray(t["comp_c"]),
-                                comp_mu=jnp.asarray(t["comp_mu"]))
-        if isinstance(node, dict):
-            return {k: install(v) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(install(v) for v in node)
-        return node
+        lead = tuple(int(d) for d in node.w.shape[:-2])
+        n_sites[0] += int(np.prod(lead)) if lead else 1
+        t = _site_tables(plan, node.path, lead, missing=missing)
+        comp_col = None
+        if node.q is not None:
+            # precompute the column compensation colsum
+            # take(comp_c, q).sum(K) per layer — the fused epilogue
+            # then pays no per-call O(K·N) gather for it.
+            q = np.asarray(node.q) + (128 if plan.signed else 0)
+            L = int(np.prod(lead)) if lead else 1
+            K, N = q.shape[-2:]
+            g = np.take_along_axis(t["comp_c"].reshape(L, 256),
+                                   q.reshape(L, K * N), axis=1)
+            comp_col = jnp.asarray(
+                g.reshape(L, K, N).sum(1, dtype=np.float64)
+                .astype(np.float32).reshape(*lead, 1, N))
+        key = _bank_key(node.path, plan, t["uniq_designs"])
+        qlin.register_dlut_bank(
+            key, jnp.asarray(t["dlut"], dtype=dlut_dtype))
+        return node.replace(dlut=jnp.asarray(t["dlut_idx"]),
+                            dlut_bank=key,
+                            comp_r=jnp.asarray(t["comp_r"]),
+                            comp_c=jnp.asarray(t["comp_c"]),
+                            comp_mu=jnp.asarray(t["comp_mu"]),
+                            comp_col=comp_col)
 
-    out = install(pparams)
+    out = qlin.map_quantized(pparams, install)
     _check_plan_coverage(plan, missing, n_sites[0], strict)
     return out
 
@@ -378,10 +426,12 @@ def make_plan_injector(params, plan: DesignPlan, qcfg: QuantConfig, *,
     per-layer delta/compensation tables (no cached q — weight
     quantization stays dynamic, as QAT needs).  Call inside the loss so
     autodiff sees straight through to the raw leaves and the optimizer
-    tree is untouched; the tables are jit constants riding the scan.
-    Like apply_plan, strict=True rejects a plan that does not cover
-    this model's sites."""
+    tree is untouched; the delta tables live in the process table bank
+    (one jit constant per site — not scan-sliced) and the wrapper
+    carries the per-layer index, like apply_plan.  strict=True rejects
+    a plan that does not cover this model's sites."""
     import jax.numpy as jnp
+    dlut_dtype = _plan_dlut_dtype()
     if plan.mode != qcfg.mode:
         raise ValueError(f"plan was built for mode {plan.mode!r} but the "
                          f"training QuantConfig uses {qcfg.mode!r}")
@@ -393,8 +443,16 @@ def make_plan_injector(params, plan: DesignPlan, qcfg: QuantConfig, *,
         lead = tuple(int(d) for d in v.shape[:-2])
         n_sites[0] += int(np.prod(lead)) if lead else 1
         t = _site_tables(plan, path, lead, missing=missing)
-        consts[path] = {k: jnp.asarray(t[k])
-                        for k in ("dlut", "comp_r", "comp_c", "comp_mu")}
+        key = _bank_key(path, plan, t["uniq_designs"])
+        qlin.register_dlut_bank(key,
+                                jnp.asarray(t["dlut"], dtype=dlut_dtype))
+        consts[path] = {
+            "dlut": jnp.asarray(t["dlut_idx"]),
+            "dlut_bank": key,
+            "comp_r": jnp.asarray(t["comp_r"]),
+            "comp_c": jnp.asarray(t["comp_c"]),
+            "comp_mu": jnp.asarray(t["comp_mu"]),
+        }
         return v
 
     qlin.walk_dense(params, collect)
@@ -404,7 +462,8 @@ def make_plan_injector(params, plan: DesignPlan, qcfg: QuantConfig, *,
         def wrap(v, path):
             c = consts[path]
             return qlin.QuantizedWeight(
-                v, dlut=c["dlut"], comp_r=c["comp_r"], comp_c=c["comp_c"],
+                v, dlut=c["dlut"], dlut_bank=c["dlut_bank"],
+                comp_r=c["comp_r"], comp_c=c["comp_c"],
                 comp_mu=c["comp_mu"], mode=qcfg.mode, path=path,
                 per_channel=qcfg.w_per_channel)
         return qlin.walk_dense(p, wrap)

@@ -40,39 +40,63 @@ def apply_calibration(pparams, table: CalibrationTable, *,
     leaves them dynamic."""
 
     def install(node):
-        if isinstance(node, qlin.QuantizedWeight):
-            if node.mode != table.mode:
-                raise ValueError(
-                    f"calibration table was observed under mode "
-                    f"{table.mode!r} but weights are prequantized for "
-                    f"{node.mode!r} (site {node.path!r})")
-            lead = tuple(int(d) for d in node.w.shape[:-2])
-            scales = np.zeros(lead, np.float32)
-            zps = np.zeros(lead, np.float32)
-            for idx in _lead_indices(lead):
-                key = site_key(node.path, idx)
-                if key not in table.sites:
-                    if strict:
-                        raise KeyError(
-                            f"site {key!r} missing from the calibration "
-                            f"table ({len(table.sites)} sites recorded); "
-                            f"run more representative batches or pass "
-                            f"strict=False to leave it dynamic")
-                    return node
-                s, z = table.act_quant(key)
-                scales[idx] = s
-                zps[idx] = 0.0 if z is None else z
-            return node.replace(
-                act_scale=jnp.asarray(scales),
-                act_zp=(jnp.asarray(zps) if table.mode == "asym_u8"
-                        else None))
-        if isinstance(node, dict):
-            return {k: install(v) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(install(v) for v in node)
-        return node
+        if node.mode != table.mode:
+            raise ValueError(
+                f"calibration table was observed under mode "
+                f"{table.mode!r} but weights are prequantized for "
+                f"{node.mode!r} (site {node.path!r})")
+        lead = tuple(int(d) for d in node.w.shape[:-2])
+        scales = np.zeros(lead, np.float32)
+        zps = np.zeros(lead, np.float32)
+        for idx in _lead_indices(lead):
+            key = site_key(node.path, idx)
+            if key not in table.sites:
+                if strict:
+                    raise KeyError(
+                        f"site {key!r} missing from the calibration "
+                        f"table ({len(table.sites)} sites recorded); "
+                        f"run more representative batches or pass "
+                        f"strict=False to leave it dynamic")
+                return node
+            s, z = table.act_quant(key)
+            scales[idx] = s
+            zps[idx] = 0.0 if z is None else z
+        return node.replace(
+            act_scale=jnp.asarray(scales),
+            act_zp=(jnp.asarray(zps) if table.mode == "asym_u8"
+                    else None))
 
-    return install(pparams)
+    return qlin.map_quantized(pparams, install)
+
+
+def attach_comp_cols(pparams, qcfg) -> object:
+    """Cache the column-compensation colsum on every prequantized weight
+    that does NOT carry per-layer plan tables: ``take(mu_c, q).sum(K)``
+    for the serving design's static mean-field table (quant.linear
+    ``_mean_field_tables``).  The fused-qdot epilogue then reads the
+    cached (…, 1, N) vector instead of gathering O(K·N) entries per
+    call.  Plan-installed wrappers (comp_c present) are skipped —
+    ``apply_plan`` caches their per-layer comp_col itself.
+
+    The cache is design-specific: re-run after changing
+    ``QuantConfig.design`` (serve.prepare_params does this in order).
+    No-op when qcfg.compensate or qcfg.enabled is off."""
+    import jax.numpy as jnp  # noqa: F811 (module-level import exists)
+    if not (qcfg.enabled and qcfg.compensate):
+        return pparams
+    mu_r, mu_c, mu = qlin._mean_field_tables(qcfg.design, signed=qcfg.signed)
+    mu_c = np.asarray(mu_c)
+    off = 128 if qcfg.signed else 0
+
+    def install(node):
+        if node.q is None or node.comp_c is not None:
+            return node
+        g = np.take(mu_c, np.asarray(node.q) + off)
+        return node.replace(comp_col=jnp.asarray(
+            g.sum(-2, keepdims=True, dtype=np.float64)
+            .astype(np.float32)))
+
+    return qlin.map_quantized(pparams, install)
 
 
 def coverage(pparams, table: CalibrationTable) -> dict:

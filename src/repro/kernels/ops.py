@@ -9,6 +9,12 @@
                a validation vehicle, not a fast path).  Pads any shape;
                the signed offset folds into the gather index (no
                operand pre-shift).
+  'fused'    — the fused quantize->delta->dequant serving kernel
+               (``fused_qdot`` below).  quant.linear dispatches to it
+               when a QuantizedWeight carries calibrated static
+               activation scales; integer-operand approx_matmul calls
+               with backend='fused' fall back to 'delta' (same integer
+               core, nothing to fuse without the float ends).
   'pallas'   — the delta Pallas kernel explicitly (interpret mode off
                TPU; what the kernel tests exercise).
   'delta_xla'— the blocked-XLA twin explicitly (exact dot + K-blocked
@@ -38,6 +44,7 @@ import numpy as np
 
 from . import ref
 from .approx_matmul import delta_matmul, lut_matmul, residual_matmul
+from .approx_matmul import fused_qdot as _fused_qdot_pallas
 
 _LUT_CACHE: dict = {}
 
@@ -118,18 +125,19 @@ def _approx_matmul_fwd_impl(a, b, design, backend, rank, signed=False):
         # surface unless XLA fuses it — fine at test/benchmark scale, use
         # 'residual_xla' for the big-model graphs (see DESIGN.md §Perf).
         out = ref.approx_matmul_ref(a2, b, lut(), offset=off)
-    elif backend in ("pallas", "delta", "delta_xla"):
+    elif backend in ("pallas", "delta", "delta_xla", "fused"):
         # Two-stage delta path: exact MXU product + int16 delta gather.
         # Signed operands index the table via the folded-in offset; no
         # pre-shift pass, and shapes need not be block multiples.
-        # 'delta' picks the lowering for the platform: the Pallas kernel
-        # on real TPU, the blocked-XLA twin on CPU/GPU (where Pallas
-        # would run in interpret mode — semantics-equal but emulated).
+        # 'delta' (and 'fused', which on integer operands has no float
+        # ends to fuse) picks the lowering for the platform: the Pallas
+        # kernel on real TPU — interpret resolves platform-adaptively
+        # inside delta_matmul — the blocked-XLA twin on CPU/GPU.
         on_tpu = jax.default_backend() == "tpu"
-        if backend == "pallas" or (backend == "delta" and on_tpu):
+        if backend == "pallas" or (backend in ("delta", "fused") and on_tpu):
             out = delta_matmul(a2, b,
                                jnp.asarray(get_delta_lut(design, signed)),
-                               offset=off, interpret=not on_tpu)
+                               offset=off)
         else:
             out = ref.delta_matmul_ref(a2, b, get_delta_lut(design, signed),
                                        offset=off)
@@ -183,3 +191,74 @@ def approx_mul(a: jax.Array, b: jax.Array, design: str = "design2",
     if signed:
         return ref.approx_mul_ref(a, b, get_signed_lut(design), offset=128)
     return ref.approx_mul_ref(a, b, get_lut(design))
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize -> delta -> dequant serving entry point
+# ---------------------------------------------------------------------------
+
+def _as_col(v, N: int):
+    """Normalize a scalar / (1,N) / (N,) epilogue parameter to (N,) f32
+    (per-tensor values broadcast; elementwise epilogue math is then
+    bit-identical to the scalar-broadcast unfused pipeline)."""
+    if v is None:
+        return jnp.zeros((N,), jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    return jnp.broadcast_to(v.reshape(-1) if v.ndim else v, (N,))
+
+
+def fused_qdot(x: jax.Array, qw: jax.Array, dlut: jax.Array, *,
+               dlut_idx=None, sx, zx=None, sw, zw=None, colsum=None,
+               comp_r=None, comp_col=None, comp_mu=None,
+               signed: bool = False, compensate: bool = False,
+               block=(128, 128, 128), k_sub: int = 32, k_block: int = 32,
+               lowering: str = "auto") -> jax.Array:
+    """The fused serving qdot: float x (..., K) @ prequantized qw (K, N)
+    -> float32 (..., N), with static-scale activation quantization, the
+    two-stage delta product (``dlut`` as an operand), and the dequant
+    epilogue in one lowered body.
+
+    dlut: (256, 256) delta table, or a stacked (L, 256, 256) BANK with
+    ``dlut_idx`` a scalar int32 layer index (the mixed-design plan
+    path: quant.linear.register_dlut_bank keeps the bank out of the
+    layer scan; the index selects the table via scalar-prefetch on the
+    Pallas lowering and a folded gather base on the XLA twin).
+    sx/zx: calibrated static activation scale / zero point (zx None for
+    sym_i8).  sw/zw: weight scale / zero point — scalar (per-tensor) or
+    (1, N)/(N,) (per-channel).  colsum: colsum(qw) for the asym_u8
+    zero-point cross term.  comp_*: mean-field compensation tables
+    (row table (256,), precomputed column colsum (N,), scalar mean)
+    when ``compensate``.  ``lowering``: 'auto' (Pallas kernel on TPU,
+    blocked-XLA twin elsewhere), 'pallas', or 'xla'.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = qw.shape[-1]
+    x2 = x.reshape(-1, K)
+    off = 128 if signed else 0
+    scal = jnp.stack([jnp.asarray(sx, jnp.float32).reshape(()),
+                      (jnp.asarray(zx, jnp.float32).reshape(())
+                       if zx is not None else jnp.float32(0.0)),
+                      (jnp.asarray(comp_mu, jnp.float32).reshape(())
+                       if comp_mu is not None else jnp.float32(0.0)),
+                      jnp.float32(0.0), jnp.float32(0.0),    # kpad corr slots
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)])
+    ntab = jnp.stack([_as_col(sw, N), _as_col(zw, N),
+                      _as_col(colsum, N), _as_col(comp_col, N)])
+    cr = (jnp.asarray(comp_r, jnp.float32).reshape(-1) if comp_r is not None
+          else jnp.zeros((256,), jnp.float32))
+    layer = (jnp.asarray(dlut_idx, jnp.int32).reshape(())
+             if dlut_idx is not None else None)
+    on_tpu = jax.default_backend() == "tpu"
+    if lowering == "pallas" or (lowering == "auto" and on_tpu):
+        out = _fused_qdot_pallas(x2, qw, jnp.asarray(dlut), scal, ntab, cr,
+                                 dlut_idx=layer, block=tuple(block),
+                                 offset=off, asym=not signed,
+                                 compensate=compensate, k_sub=k_sub)
+    elif lowering in ("auto", "xla"):
+        out = ref.fused_qdot_ref(x2, qw, dlut, scal, ntab, cr, offset=off,
+                                 asym=not signed, compensate=compensate,
+                                 k_block=k_block, layer=layer)
+    else:
+        raise ValueError(lowering)
+    return out.reshape(*lead, N)

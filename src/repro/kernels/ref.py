@@ -38,8 +38,17 @@ def approx_matmul_ref(a, b, lut: np.ndarray, offset: int = 0):
     return jnp.take(flat, idx, axis=0).sum(axis=1)
 
 
+def _pick_k_block(K: int, k_block: int) -> int:
+    """Largest candidate K-block (<= k_block, from the fixed ladder)
+    that divides K — shared by the blocked delta twins."""
+    for kb in (k_block, 64, 32, 16, 8, 4, 2, 1):
+        if kb <= k_block and K % kb == 0:
+            return kb
+    return 1
+
+
 def delta_matmul_ref(a, b, dlut: np.ndarray, offset: int = 0,
-                     k_block: int = 32):
+                     k_block: int = 32, layer=None):
     """Two-stage fast path, XLA lowering: exact dot + blocked delta
     gather (int32 out).
 
@@ -57,21 +66,27 @@ def delta_matmul_ref(a, b, dlut: np.ndarray, offset: int = 0,
     while the int16 packing is what matters for TPU VMEM, i.e. for the
     Pallas kernel.  ~2x faster than the legacy product-LUT Pallas
     kernel at 256^3 on the CPU container (BENCH_kernels.json).
+
+    ``layer``: with a stacked table BANK dlut (L, 256, 256) (the
+    mixed-design plan path — quant.linear.register_dlut_bank), a scalar
+    int32 index selecting the layer's table.  The selection folds into
+    the gather base (layer*65536): no 256 KiB table slice materializes
+    per call, which is what makes per-layer plan tables scan-friendly.
     """
     M, K = a.shape
     N = b.shape[1]
     exact = exact_matmul_ref(a, b)
     flat = jnp.asarray(dlut, dtype=jnp.int32).reshape(-1)
-    for kb in (k_block, 16, 8, 4, 2, 1):
-        if kb <= k_block and K % kb == 0:
-            break
+    kb = _pick_k_block(K, k_block)
     ab = (a.astype(jnp.int32) + offset).reshape(M, K // kb, kb)
-    ab = (ab & 0xFF).transpose(1, 0, 2)                     # (nb, M, kb)
+    ab = (ab & 0xFF).transpose(1, 0, 2) * 256               # (nb, M, kb)
+    if layer is not None:
+        ab = ab + layer.astype(jnp.int32) * 65536
     bb = ((b.astype(jnp.int32) + offset) & 0xFF).reshape(K // kb, kb, N)
 
     def body(acc, inp):
         ak, bk = inp
-        idx = ak[:, :, None] * 256 + bk[None, :, :]         # (M, kb, N)
+        idx = ak[:, :, None] + bk[None, :, :]               # (M, kb, N)
         g = flat.at[idx].get(mode="promise_in_bounds")
         return acc + g.sum(axis=1), None
 
@@ -83,6 +98,73 @@ def exact_matmul_ref(a, b):
     """Exact integer matmul oracle (int32)."""
     return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32),
                       preferred_element_type=jnp.int32)
+
+
+def fused_qdot_ref(x, qw, dlut, scal, ntab, comp_r, offset: int = 0,
+                   asym: bool = True, compensate: bool = False,
+                   k_block: int = 32, layer=None):
+    """Blocked-XLA twin of kernels.approx_matmul.fused_qdot — the fused
+    quantize -> (exact dot + delta gather) -> dequant serving path for
+    non-TPU platforms (float x in, float32 out, same operand layout).
+
+    x: (M, K) float; qw: (K, N) int32 prequantized weights;
+    dlut: (256, 256) delta table, or a stacked (L, 256, 256) bank with
+    ``layer`` a scalar int32 index (the mixed-design plan path: the
+    bank rides as one jit constant, the layer selection folds into the
+    gather base — no per-call table slice); scal: (>=3,) f32 [sx, zx,
+    comp_mu, ...]; ntab: (4, N) f32 rows [sw, zw, colsum, comp_col];
+    comp_r: (256,) f32.
+
+    Unlike the general delta_matmul_ref oracle this twin OWNS its
+    operand domain — qx comes out of the in-graph clip and qw out of
+    prequantize, both provably in [lo, hi] — so the gather drops the
+    defensive & 0xFF masks and folds the signed +128 shifts of BOTH
+    operands into one compile-time index constant (offset*257): no
+    per-step shift pass over the static (K, N) weight operand at all.
+
+    Every float epilogue op mirrors the unfused quant.linear pipeline's
+    op sequence, so fused-vs-unfused differences stay at float-reduction
+    ULP level (the integer product itself is bit-exact by the delta
+    decomposition).  No padding needed: the K-blocked scan handles any
+    shape.
+    """
+    sx, zx = scal[0], scal[1]
+    lo, hi = (0.0, 255.0) if asym else (-128.0, 127.0)
+    qx = jnp.clip(jnp.round(x.astype(jnp.float32) / sx) + zx,
+                  lo, hi).astype(jnp.int32)
+    M, K = qx.shape
+    N = qw.shape[1]
+    exact = exact_matmul_ref(qx, qw)
+    flat = jnp.asarray(dlut, dtype=jnp.int32).reshape(-1)
+    kb = _pick_k_block(K, k_block)
+    # folded offsets: D[(a+off), (b+off)] flattens to a*256 + b + off*257,
+    # with both operands' shifts — and the bank's layer base — riding
+    # the (M, K)-side affine.
+    ab = qx * 256 + offset * 257
+    if layer is not None:
+        ab = ab + layer.astype(jnp.int32) * 65536
+    ab = ab.reshape(M, K // kb, kb).transpose(1, 0, 2)      # (nb, M, kb)
+    bb = qw.astype(jnp.int32).reshape(K // kb, kb, N)
+
+    def body(acc, inp):
+        ak, bk = inp
+        idx = ak[:, :, None] + bk[None, :, :]               # (M, kb, N)
+        g = flat.at[idx].get(mode="promise_in_bounds")
+        return acc + g.sum(axis=1), None
+
+    prod, _ = jax.lax.scan(body, exact, (ab, bb))
+    accf = prod.astype(jnp.float32)
+    sw = ntab[0, :][None, :]
+    if compensate:
+        rowc = jnp.take(comp_r, qx + offset,
+                        axis=0).sum(-1, keepdims=True)
+        accf = accf - (rowc + ntab[3, :][None, :] - K * scal[2])
+    if asym:
+        zw = ntab[1, :][None, :]
+        colsum = ntab[2, :][None, :]
+        rowsum = qx.sum(axis=-1, keepdims=True).astype(jnp.float32)
+        accf = accf - zw * rowsum - zx * colsum + K * zx * zw
+    return accf * (sx * sw)
 
 
 def residual_corrected_matmul_ref(a, b, F: np.ndarray, G: np.ndarray,

@@ -15,6 +15,14 @@ Quantization precomputation ladder (see quant/linear.py):
                      decode: each scanned layer gathers its own
                      design's delta table
 --calibrate and --plan imply --prequantize (the caches they attach to).
+
+With static scales installed (--calibrate / --plan) the backend
+defaults to 'fused': one kernel quantizes the activations, runs the
+two-stage exact-dot + delta-gather (the plan's per-layer tables ride
+the scan as kernel operands) and dequantizes in the epilogue.  Pass an
+explicit --backend to A/B the unfused pipeline.  Serving always runs
+qdot in inference mode (the exact STE matmul — a training-only
+gradient vehicle that never changes the output — is skipped).
 """
 from __future__ import annotations
 
@@ -76,6 +84,12 @@ def prepare_params(params, cfg, qcfg, args):
         params = apply_plan(params, plan, qcfg)
         notes.append(f"design plan {args.plan} "
                      f"(histogram {plan.histogram()})")
+    if qcfg.backend == "fused" and qcfg.compensate:
+        # after apply_plan: plan-installed wrappers already carry their
+        # per-layer comp_col and are skipped (comp_c present)
+        from repro.calib import attach_comp_cols
+        params = attach_comp_cols(params, qcfg)
+        notes.append("fused backend (cached compensation colsums)")
     return params, notes
 
 
@@ -87,7 +101,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--design", default="design2")
-    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--backend", default=None,
+                    help="approximate-matmul backend (quant.QuantConfig)."
+                         "  Default: 'fused' when static act scales are "
+                         "installed (--calibrate/--plan), else 'xla'")
     ap.add_argument("--quant-mode", default="asym_u8",
                     choices=["asym_u8", "sym_i8"],
                     help="asym_u8: unsigned multiplier + zero-point "
@@ -107,9 +124,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    qcfg = QuantConfig(design=args.design, backend=args.backend,
+    backend = args.backend or (
+        "fused" if (args.calibrate or args.plan) else "xla")
+    qcfg = QuantConfig(design=args.design, backend=backend,
                        mode=args.quant_mode,
-                       w_per_channel=args.per_channel)
+                       w_per_channel=args.per_channel,
+                       inference=True)
     B = args.requests
     s_max = args.prompt_len + args.gen_len
 

@@ -67,6 +67,32 @@ _OBSERVER = None
 # per process, not one per call site per trace.
 _STALE_WARNED: set = set()
 
+# Delta-table banks (repro.calib.plan): per-site STACKED per-layer delta
+# tables, registered once at plan-install time and closed over as jit
+# CONSTANTS by qdot.  Keys are content-addressed (path + mode + design
+# list), so re-registering is idempotent and two plans only collide when
+# they would install identical tables anyway.
+_DLUT_BANKS: dict = {}
+
+
+def register_dlut_bank(key: str, bank) -> None:
+    """Register a site's stacked (L, 256, 256) delta-table bank.  The
+    per-layer wrapper then carries only an int32 index into it
+    (QuantizedWeight.dlut with aux dlut_bank=key): the 256 KiB tables
+    stay out of the layer scan's sliced params entirely."""
+    _DLUT_BANKS[key] = jnp.asarray(bank).reshape(-1, 256, 256)
+
+
+def get_dlut_bank(key: str):
+    if key not in _DLUT_BANKS:
+        raise KeyError(
+            f"delta-table bank {key!r} is not registered in this process "
+            f"({len(_DLUT_BANKS)} banks known).  QuantizedWeight trees "
+            f"carrying bank indices are process-local: re-run "
+            f"calib.plan.apply_plan (or make_plan_injector) to install "
+            f"the plan here.")
+    return _DLUT_BANKS[key]
+
 
 def set_observer(obs) -> None:
     """Install (or clear, with None) the calibration observer."""
@@ -96,25 +122,41 @@ class QuantizedWeight:
       act_scale/act_zp
                     calibrated STATIC activation quantizer (…,) — drops
                     the per-token min/max reduction (repro.calib.static)
-      dlut          per-layer delta table (…, 256, 256) int16/int32 —
-                    the mixed-design plan path: exact product + gather
-                    of THIS layer's design error (repro.calib.plan)
+      dlut          the mixed-design plan path (repro.calib.plan):
+                    exact product + gather of THIS layer's design
+                    error.  Either a per-layer delta table
+                    (…, 256, 256) int16/int32, or — when the aux field
+                    ``dlut_bank`` names a registered table bank — a
+                    per-layer int32 INDEX (… ,) into that bank.  The
+                    bank form is what apply_plan installs: the stacked
+                    tables stay OUT of the scan-sliced params (a 256 KiB
+                    dynamic-slice per site per layer per step,
+                    measured ~60%% of the plan-path decode step on CPU)
+                    and ride the jitted body as one constant; only the
+                    scalar index rides the scan
       comp_r/comp_c/comp_mu
                     per-layer mean-field compensation tables matching
                     dlut's designs (used when cfg.compensate)
+      comp_col      cached colsum of the column compensation table over
+                    the quantized weight, (…, 1, N) f32 — drops the
+                    per-call O(K·N) take(comp_c, q) gather from the
+                    fused epilogue (calib.plan.apply_plan /
+                    calib.static.attach_comp_cols)
 
     Static metadata (pytree aux, preserved by scan/vmap slicing):
       mode          QuantConfig.mode the cache was built for
       path          the weight's params-tree path ("units.0.attn.wq") —
                     the calibration site name
       per_channel   weight-scale granularity of q/scale/zp
+      dlut_bank     registry key (register_dlut_bank) of the site's
+                    stacked delta-table bank; dlut is then an index
     """
 
     def __init__(self, w, q=None, scale=None, zp=None, colsum=None,
                  act_scale=None, act_zp=None, dlut=None,
-                 comp_r=None, comp_c=None, comp_mu=None,
+                 comp_r=None, comp_c=None, comp_mu=None, comp_col=None,
                  mode: str = "asym_u8", path: str = "",
-                 per_channel: bool = False):
+                 per_channel: bool = False, dlut_bank=None):
         self.w = w
         self.q = q
         self.scale = scale
@@ -126,9 +168,11 @@ class QuantizedWeight:
         self.comp_r = comp_r
         self.comp_c = comp_c
         self.comp_mu = comp_mu
+        self.comp_col = comp_col
         self.mode = mode
         self.path = path
         self.per_channel = per_channel
+        self.dlut_bank = dlut_bank
 
     @property
     def ndim(self):
@@ -142,21 +186,25 @@ class QuantizedWeight:
         d = dict(w=self.w, q=self.q, scale=self.scale, zp=self.zp,
                  colsum=self.colsum, act_scale=self.act_scale,
                  act_zp=self.act_zp, dlut=self.dlut, comp_r=self.comp_r,
-                 comp_c=self.comp_c, comp_mu=self.comp_mu, mode=self.mode,
-                 path=self.path, per_channel=self.per_channel)
+                 comp_c=self.comp_c, comp_mu=self.comp_mu,
+                 comp_col=self.comp_col, mode=self.mode,
+                 path=self.path, per_channel=self.per_channel,
+                 dlut_bank=self.dlut_bank)
         d.update(kw)
         return QuantizedWeight(**d)
 
     def tree_flatten(self):
         children = (self.w, self.q, self.scale, self.zp, self.colsum,
                     self.act_scale, self.act_zp, self.dlut,
-                    self.comp_r, self.comp_c, self.comp_mu)
-        return children, (self.mode, self.path, self.per_channel)
+                    self.comp_r, self.comp_c, self.comp_mu, self.comp_col)
+        return children, (self.mode, self.path, self.per_channel,
+                          self.dlut_bank)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        mode, path, per_channel = aux
-        return cls(*children, mode=mode, path=path, per_channel=per_channel)
+        mode, path, per_channel, dlut_bank = aux
+        return cls(*children, mode=mode, path=path, per_channel=per_channel,
+                   dlut_bank=dlut_bank)
 
     def __repr__(self):
         extras = [k for k in ("act_scale", "dlut")
@@ -197,6 +245,19 @@ def is_dense_weight(k, v) -> bool:
     return ((k in _DENSE_KEYS or (isinstance(k, str) and k.startswith("w")))
             and isinstance(v, jax.Array) and v.ndim >= 2
             and jnp.issubdtype(v.dtype, jnp.floating))
+
+
+def map_quantized(node, fn):
+    """Rebuild a params tree applying fn(qw) -> QuantizedWeight to every
+    QuantizedWeight node (the shared install traversal of
+    calib.static/calib.plan)."""
+    if isinstance(node, QuantizedWeight):
+        return fn(node)
+    if isinstance(node, dict):
+        return {k: map_quantized(v, fn) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(map_quantized(v, fn) for v in node)
+    return node
 
 
 def walk_dense(node, fn, path=""):
@@ -284,16 +345,67 @@ def _wparam(p, per_channel: bool):
     return p.reshape(())
 
 
-def _delta_prod(qx, qw, dlut, offset: int):
+def _delta_prod(qx, qw, pre, offset: int):
     """Per-layer mixed-design product: exact int32 matmul + gather of
-    the layer's OWN delta table (the scan-sliced pre.dlut), i.e. the
-    two-stage decomposition with a data-driven stage-2 table.  Reuses
-    the blocked-XLA delta twin, which accepts a traced table."""
+    the layer's OWN delta table, i.e. the two-stage decomposition with
+    a data-driven stage-2 table.  Bank-registered plans gather straight
+    from the constant bank with the scan-sliced layer index folded into
+    the gather base; legacy table-carrying wrappers fall back to the
+    blocked-XLA delta twin with the traced table."""
     from repro.kernels import ref
     lead = qx.shape[:-1]
     a2 = qx.reshape(-1, qx.shape[-1])
-    out = ref.delta_matmul_ref(a2, qw, dlut, offset=offset)
+    if pre.dlut_bank is not None:
+        out = ref.delta_matmul_ref(a2, qw, get_dlut_bank(pre.dlut_bank),
+                                   offset=offset,
+                                   layer=pre.dlut.reshape(()))
+    else:
+        out = ref.delta_matmul_ref(a2, qw, pre.dlut, offset=offset)
     return out.reshape(*lead, qw.shape[-1])
+
+
+def _use_fused(cfg: QuantConfig, pre) -> bool:
+    """backend='fused' dispatches to the one-kernel quantize->delta->
+    dequant path whenever the wrapper carries everything the kernel
+    needs precomputed: cached weight quantization AND calibrated static
+    activation scales.  Otherwise qdot falls through to the unfused
+    pipeline (whose product backend treats 'fused' as 'delta')."""
+    return (cfg.backend == "fused" and pre is not None
+            and pre.q is not None and pre.act_scale is not None)
+
+
+def _qdot_fused(x, pre, cfg: QuantConfig, signed: bool):
+    """Assemble the fused kernel's operands from a QuantizedWeight and
+    dispatch (kernels.ops.fused_qdot: Pallas on TPU, blocked-XLA twin
+    elsewhere).  The delta table is the per-layer plan slice when the
+    wrapper carries one (pre.dlut — a traced scan slice riding the same
+    jitted body), else the serving design's static table."""
+    from repro.kernels import ops
+    off = 128 if signed else 0
+    dlut_idx = None
+    if pre.dlut_bank is not None:
+        dlut = get_dlut_bank(pre.dlut_bank)
+        dlut_idx = pre.dlut.reshape(())
+    elif pre.dlut is not None:
+        dlut = pre.dlut
+    else:
+        dlut = jnp.asarray(ops.get_delta_lut(cfg.design, signed))
+    comp_r = comp_col = comp_mu = None
+    if cfg.compensate:
+        comp_r, comp_c, comp_mu = _site_comp_tables(pre, cfg, signed)
+        if pre.comp_col is not None:
+            comp_col = pre.comp_col.reshape(-1)
+        else:
+            comp_col = jnp.take(comp_c, pre.q + off, axis=0).sum(0)
+    return ops.fused_qdot(
+        x, pre.q, dlut, dlut_idx=dlut_idx,
+        sx=pre.act_scale.reshape(()),
+        zx=(pre.act_zp.reshape(()) if pre.act_zp is not None else None),
+        sw=_wparam(pre.scale, pre.per_channel),
+        zw=_wparam(pre.zp, pre.per_channel),
+        colsum=(pre.colsum.reshape(-1) if pre.colsum is not None else None),
+        comp_r=comp_r, comp_col=comp_col, comp_mu=comp_mu,
+        signed=signed, compensate=cfg.compensate)
 
 
 def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
@@ -319,6 +431,11 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
         y = _qdot_signed(x, w, cfg, pre)
     else:
         y = _qdot_asym(x, w, cfg, pre)
+    if cfg.inference:
+        # Pure inference (serve): the STE trick below evaluates to y
+        # anyway (y_ste + (y - y_ste)); skipping it halves decode FLOPs
+        # at the cost of float-reassociation ULPs on the output.
+        return y
     # STE: gradient flows as if y == x @ w  (exact fp product)
     y_ste = jnp.matmul(x, w)
     return y_ste + jax.lax.stop_gradient(y - y_ste)
@@ -337,6 +454,8 @@ def _quantize_act_static(x, pre, lo, hi):
 def _qdot_asym(x, w, cfg, pre=None):
     """Paper-faithful uint8 path: zero-point decomposition around the
     unsigned approximate product."""
+    if _use_fused(cfg, pre):
+        return _qdot_fused(x, pre, cfg, signed=False)
     if pre is not None and pre.act_scale is not None:
         qx, sx, zx = _quantize_act_static(x, pre, 0, 255)
     else:
@@ -354,7 +473,7 @@ def _qdot_asym(x, w, cfg, pre=None):
         colsum = None
     K = x.shape[-1]
     if pre is not None and pre.dlut is not None:
-        prod = _delta_prod(qx, qw, pre.dlut, offset=0)
+        prod = _delta_prod(qx, qw, pre, offset=0)
     else:
         prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank)
     prod = prod.astype(jnp.float32)
@@ -374,6 +493,8 @@ def _qdot_asym(x, w, cfg, pre=None):
 def _qdot_signed(x, w, cfg, pre=None):
     """Symmetric int8 hot path: Q_x ⊗_signed Q_w straight through the
     signed backend — no zero-point cross-term matmuls."""
+    if _use_fused(cfg, pre):
+        return _qdot_fused(x, pre, cfg, signed=True)
     if pre is not None and pre.act_scale is not None:
         qx, sx, _ = _quantize_act_static(x, pre, -128, 127)
     else:
@@ -386,7 +507,7 @@ def _qdot_signed(x, w, cfg, pre=None):
             sw = _wparam(sw, True)
     K = x.shape[-1]
     if pre is not None and pre.dlut is not None:
-        prod = _delta_prod(qx, qw, pre.dlut, offset=128)
+        prod = _delta_prod(qx, qw, pre, offset=128)
     else:
         prod = ops.approx_matmul(qx, qw, cfg.design, cfg.backend, cfg.rank,
                                  True)

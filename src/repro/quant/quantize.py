@@ -38,9 +38,13 @@ class QuantConfig:
     design:  'exact' | 'design1' | 'design2' | 'initial' | competitor ids
     backend: 'xla' (gather formulation, lowers everywhere — dry-run path)
              'pallas'/'delta' (two-stage delta kernel: exact MXU product
-             + int16 delta gather, bit-exact), 'delta_xla' (its XLA
-             twin), 'pallas_legacy' (per-k product-LUT gather kernel),
-             'residual' (rank-r fast emulation, not bit-exact),
+             + int16 delta gather, bit-exact), 'fused' (the serving
+             path: one kernel does static-scale activation quantization
+             + the two-stage delta product + the dequant epilogue;
+             requires prequantized weights with calibrated static act
+             scales, else it degrades to 'delta'), 'delta_xla' (the
+             delta XLA twin), 'pallas_legacy' (per-k product-LUT gather
+             kernel), 'residual' (rank-r fast emulation, not bit-exact),
              'exact' (bypass; fp baseline uses design='exact' as well)
     rank:    correction rank for the 'residual' backend
     compensate: beyond-paper mean-field bias compensation.  The paper's
@@ -72,6 +76,12 @@ class QuantConfig:
     # memory (measured +273 GiB/dev on nemotron — §Perf A3) and real
     # quantized deployments keep the logits layer high-precision.
     quant_unembed: bool = False
+    # Pure-inference mode (launch/serve.py sets it): qdot skips the
+    # always-on exact STE matmul.  The STE expression y_ste +
+    # stop_gradient(y - y_ste) evaluates to y numerically, so skipping
+    # it changes nothing but float-reassociation ULPs — and it halves
+    # decode-step matmul FLOPs.  Leave False anywhere gradients flow.
+    inference: bool = False
 
     def __post_init__(self):
         if self.mode not in ("asym_u8", "sym_i8"):
