@@ -13,11 +13,16 @@ Also hosts the delta-kernel block-shape autotuner (``--autotune-delta``):
 sweeps (TM, TN, TK) for kernels.approx_matmul.delta_matmul AND the
 fused serving kernel's (TM, TN, TK, TKsub) space (ops.fused_qdot, per
 quant mode) on a fixed matmul shape, recording the winners to
-experiments/delta_autotune.json.
+experiments/delta_autotune.json; and the serving-step tuner
+(``--autotune-serve``): the fused kernel's point at the PREFILL shape
+(M = B·S — a new tile regime: tall activations against the same
+weights) plus the decode-attention kernel's cache-tile (block_s) space
+(kernels.attention.decode_attention_step).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.perf_hillclimb --iter A1 [A2 ...]
   PYTHONPATH=src python -m benchmarks.perf_hillclimb --autotune-delta
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --autotune-serve
 """
 from __future__ import annotations
 
@@ -216,6 +221,66 @@ def autotune_fused(shape=(256, 256, 256), design: str = "design2",
     return records
 
 
+DECODE_ATTN_BLOCK_S = [32, 64, 128, 256]
+
+
+def autotune_decode_attn(B: int = 8, S: int = 512, H: int = 16,
+                         Kv: int = 8, hd: int = 64,
+                         out: str = "experiments/delta_autotune.json"):
+    """Sweep the fused decode-attention kernel's cache-tile size
+    ``block_s`` (kernels.attention.decode_attention_step — the online-
+    softmax S-tiling knob) against the XLA twin, recording winners to
+    ``out``.  Off-TPU the Pallas sweep runs interpret mode — the
+    relative tile ordering is the point; re-run on hardware."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+
+    if __package__:
+        from .run import bench_us
+    else:
+        from run import bench_us
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, 1, Kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, 1, Kv, hd)).astype(np.float32))
+    kc = jnp.zeros((B, S, Kv, hd), jnp.bfloat16)
+    vc = jnp.zeros((B, S, Kv, hd), jnp.bfloat16)
+    pos = jnp.full((B,), S // 2, jnp.int32)
+
+    def f(lowering, block_s=128):
+        return jax.jit(lambda q, k, v, kc, vc, p: ops.decode_attention(
+            q, k, v, kc, vc, p, n_heads=H, n_kv=Kv, head_dim=hd,
+            lowering=lowering, block_s=block_s))
+
+    results = []
+    for bs in [b for b in DECODE_ATTN_BLOCK_S if b <= S]:
+        g = f("pallas", bs)
+        us = bench_us(lambda: g(q, k, v, kc, vc, pos), reps=3)
+        results.append({"block_s": bs, "us_per_call": round(us, 1)})
+        print(f"  decode_attn pallas block_s={bs}: {us:.0f} us")
+    g = f("xla")
+    xla_us = bench_us(lambda: g(q, k, v, kc, vc, pos), reps=5)
+    print(f"  decode_attn xla twin: {xla_us:.0f} us")
+    record = {
+        "kind": "decode_attn", "shape": [B, S, H, Kv, hd],
+        "pallas": {"results": results,
+                   "best": min(results, key=lambda r: r["us_per_call"])},
+        "xla": {"us_per_call": round(xla_us, 1)},
+    }
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    hist = json.load(open(out)) if os.path.exists(out) else []
+    hist.append(record)
+    json.dump(hist, open(out, "w"), indent=1)
+    best = record["pallas"]["best"]
+    print(f"[autotune] decode_attn B{B} S{S} H{H} hd{hd}: pallas best "
+          f"block_s={best['block_s']} ({best['us_per_call']:.0f} us) "
+          f"-> {out}")
+    return record
+
+
 def run_iteration(tag: str):
     # import inside so XLA_FLAGS from dryrun module applies first
     from repro.launch import dryrun
@@ -293,16 +358,30 @@ if __name__ == "__main__":
                          "the fused kernel's (TM,TN,TK,TKsub) space per "
                          "quant mode; record winners to experiments/"
                          "delta_autotune.json")
+    ap.add_argument("--autotune-serve", action="store_true",
+                    help="learn the serving step's new tile regimes: the "
+                         "fused kernel's (TM,TN,TK,TKsub) point at the "
+                         "PREFILL shape (M = B·S — --prefill-shape) and "
+                         "the decode-attention kernel's block_s space; "
+                         "appended to experiments/delta_autotune.json")
     ap.add_argument("--shape", default="256,256,256",
                     help="M,K,N for --autotune-delta")
+    ap.add_argument("--prefill-shape", default="512,256,256",
+                    help="M,K,N for the --autotune-serve prefill point "
+                         "(M = B·S)")
     ap.add_argument("--signed", action="store_true",
                     help="autotune the signed (int8-operand) path")
     args = ap.parse_args()
-    if not args.iter and not args.autotune_delta:
-        ap.error("nothing to do: pass --iter and/or --autotune-delta")
+    if not args.iter and not args.autotune_delta and not args.autotune_serve:
+        ap.error("nothing to do: pass --iter, --autotune-delta and/or "
+                 "--autotune-serve")
     for tag in args.iter:
         run_iteration(tag)
     if args.autotune_delta:
         shape = tuple(int(x) for x in args.shape.split(","))
         autotune_delta(shape, signed=args.signed)
         autotune_fused(shape)
+    if args.autotune_serve:
+        pshape = tuple(int(x) for x in args.prefill_shape.split(","))
+        autotune_fused(pshape)      # the M = B·S prefill tile regime
+        autotune_decode_attn()

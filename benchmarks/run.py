@@ -105,6 +105,35 @@ def kernel_microbench():
         colsum=b.sum(0).astype(jnp.float32), lowering="xla"))
     timed("fused_qdot_xla", lambda: f_fused(x, b))
 
+    # fused decode-step attention/cache op (the serve decode path):
+    # the XLA twin as shipped + the Pallas lowering (interpret off-TPU,
+    # validation-speed only — the relative row matters on real TPU)
+    B_, H_, Kv_, hd_, S_ = 8, 8, 4, 64, 256
+    qa = jnp.asarray(rng.normal(size=(B_, 1, H_, hd_)).astype(np.float32))
+    ka = jnp.asarray(rng.normal(size=(B_, 1, Kv_, hd_)).astype(np.float32))
+    va = jnp.asarray(rng.normal(size=(B_, 1, Kv_, hd_)).astype(np.float32))
+    kc = jnp.zeros((B_, S_, Kv_, hd_), jnp.bfloat16)
+    vc = jnp.zeros((B_, S_, Kv_, hd_), jnp.bfloat16)
+    pos = jnp.full((B_,), S_ // 2, jnp.int32)
+
+    def attn(lowering):
+        return jax.jit(lambda q, k, v, kc, vc, p: ops.decode_attention(
+            q, k, v, kc, vc, p, n_heads=H_, n_kv=Kv_, head_dim=hd_,
+            lowering=lowering))
+    f_ax = attn("xla")
+    rows_shape = f"B{B_}_S{S_}_H{H_}_hd{hd_}"
+    st = bench_stats(lambda: f_ax(qa, ka, va, kc, vc, pos))
+    rows.append({"kernel": "decode_attn_xla",
+                 "us_per_call": round(st["min_us"], 1),
+                 "us_median": round(st["median_us"], 1),
+                 "shape": rows_shape})
+    f_ap = attn("pallas")
+    st = bench_stats(lambda: f_ap(qa, ka, va, kc, vc, pos), reps=3)
+    rows.append({"kernel": "decode_attn_pallas_interpret_raw",
+                 "us_per_call": round(st["min_us"], 1),
+                 "us_median": round(st["median_us"], 1),
+                 "shape": rows_shape})
+
     # serving-PIPELINE A/B at compute scale, through qdot itself: the
     # unfused static path as PR 3 served it (xla product backend + STE
     # matmul + per-call compensation gathers) vs the same datapath
@@ -183,7 +212,8 @@ def serve_decode_bench():
                              attach_comp_cols, calibrate_decode,
                              plan_designs)
     from repro.models import transformer as T
-    from repro.quant import QuantConfig, prequantize_weights
+    from repro.quant import (QuantConfig, fuse_projections,
+                             prequantize_weights)
     from repro.train import make_serve_step
 
     cfg = configs.get_smoke("qwen3-1.7b")
@@ -200,8 +230,12 @@ def serve_decode_bench():
         sp = apply_calibration(pp, table)
         plan = plan_designs(table, qcfg, arch="qwen3-1.7b")
         mp = apply_plan(sp, plan, qcfg)
-        spf = attach_comp_cols(sp, qfused)
-        mpf = apply_plan(spf, plan, qfused)
+        # the fused rows serve what launch/serve.py now serves by
+        # default: comp colsums cached AND projections merged
+        # (fuse_projections — wqkv / w_gateup, bit-identical per column)
+        spf = fuse_projections(attach_comp_cols(sp, qfused))
+        mpf = fuse_projections(apply_plan(attach_comp_cols(sp, qfused),
+                                          plan, qfused))
         step = jax.jit(make_serve_step(cfg, qcfg))
         step_fused = jax.jit(make_serve_step(cfg, qfused))
         base = None
@@ -243,13 +277,84 @@ def serve_decode_bench():
     return rows
 
 
+def serve_prefill_bench():
+    """Full-sequence fused prefill vs the token-by-token prompt loop
+    (what launch/serve.py shipped through PR 4): B=4 requests, P=64
+    prompt tokens, on the static-calibrated fused serving tree.  The
+    `token_loop` row steps the prompt through the jitted serve step
+    exactly like the old driver (per-step host slice included) on the
+    PR 4-era UNMERGED tree; the `fused_prefill` row is one M = B·P pass
+    through make_prefill_step on the merged tree serve now defaults to.
+    `speedup_vs_loop` on the fused row is the ISSUE-5 acceptance
+    number."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import configs
+    from repro.calib import (apply_calibration, attach_comp_cols,
+                             calibrate_decode)
+    from repro.models import transformer as T
+    from repro.quant import (QuantConfig, fuse_projections,
+                             prequantize_weights)
+    from repro.train import make_prefill_step, make_serve_step
+
+    cfg = configs.get_smoke("qwen3-1.7b")
+    B, P = 4, 64
+    rows = []
+    for mode in ("asym_u8", "sym_i8"):
+        qcfg = QuantConfig(design="design2", backend="xla", mode=mode)
+        qfused = dataclasses.replace(qcfg, backend="fused", inference=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        pp = prequantize_weights(params, qcfg)
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, (B, P)).astype(np.int32)
+        cal = np.random.default_rng(1).integers(
+            0, cfg.vocab, (B, 4)).astype(np.int32)
+        table = calibrate_decode(pp, cfg, qcfg, cal, gen_len=2)
+        spf = attach_comp_cols(apply_calibration(pp, table), qfused)
+        spm = fuse_projections(spf)
+        step = jax.jit(make_serve_step(cfg, qfused))
+        pf = jax.jit(make_prefill_step(cfg, qfused))
+        prompts_dev = jnp.asarray(prompts)
+        state0 = T.init_decode_state(cfg, B, P + 8)
+
+        def token_loop():
+            st = state0
+            for i in range(P):
+                tok, lg, st = step(spf, st,
+                                   jnp.asarray(prompts[:, i:i + 1]))
+            return lg
+
+        def fused_prefill():
+            return pf(spm, state0, prompts_dev)[1]
+
+        st_loop = bench_stats(token_loop, reps=5)
+        st_pf = bench_stats(fused_prefill, reps=5)
+        n = B * P
+        for name, st_ in (("token_loop", st_loop),
+                          ("fused_prefill", st_pf)):
+            row = {"config": name, "mode": mode,
+                   "us_per_token": round(st_["min_us"] / n, 1),
+                   "us_median": round(st_["median_us"] / n, 1),
+                   "tok_s": round(n / (st_["min_us"] * 1e-6), 0),
+                   "shape": f"B{B}_P{P}_{cfg.name}"}
+            if name == "fused_prefill":
+                row["speedup_vs_loop"] = round(
+                    st_loop["min_us"] / st_["min_us"], 2)
+            rows.append(row)
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Regression check against the committed baseline
 # ---------------------------------------------------------------------------
 
 # table -> (row-identity fields, headline metric field)
 _REGRESSION_SPEC = {"kernel_microbench": (("kernel",), "us_per_call"),
-                    "serve_decode": (("config", "mode"), "us_per_step")}
+                    "serve_decode": (("config", "mode"), "us_per_step"),
+                    "serve_prefill": (("config", "mode"), "us_per_token")}
 
 
 def compare_to_baseline(baseline: dict, fresh: dict, tol: float):
@@ -324,7 +429,7 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
     if only:
         known = set(tables.ALL) | {"kernel_microbench", "qdot_modes",
-                                   "serve_decode"}
+                                   "serve_decode", "serve_prefill"}
         unknown = only - known
         if unknown:
             ap.error(f"unknown benchmark name(s) {sorted(unknown)}; "
@@ -347,7 +452,8 @@ def main(argv=None) -> None:
     json_out = {}
     for name, fn in (("kernel_microbench", kernel_microbench),
                      ("qdot_modes", qdot_mode_bench),
-                     ("serve_decode", serve_decode_bench)):
+                     ("serve_decode", serve_decode_bench),
+                     ("serve_prefill", serve_prefill_bench)):
         if wanted(name):
             rows = fn()
             print(f"### {name}")
@@ -378,8 +484,8 @@ def main(argv=None) -> None:
 
     if args.json and not json_out:
         print(f"[json] skipped {args.json}: --only excluded "
-              f"kernel_microbench, qdot_modes and serve_decode "
-              f"(nothing to record)")
+              f"kernel_microbench, qdot_modes, serve_decode and "
+              f"serve_prefill (nothing to record)")
     elif args.json:
         import platform
         payload = {"benchmarks": json_out,

@@ -12,14 +12,18 @@ echo "== benchmark CSV smoke =="
 python -m benchmarks.run --only table4_approx,table_signed_multipliers,qdot_modes
 
 echo "== kernel-bench smoke (regression check vs committed baseline, then writes BENCH_kernels.json) =="
-python -m benchmarks.run --only kernel_microbench,qdot_modes,serve_decode \
+python -m benchmarks.run --only kernel_microbench,qdot_modes,serve_decode,serve_prefill \
     --json --check-regression
 
 echo "== calibration smoke (writes experiments/design_plan_*.json) =="
 scripts/make_plan.sh qwen3-1.7b
 python -m repro.launch.serve --arch qwen3-1.7b --smoke --requests 2 \
     --prompt-len 3 --gen-len 4 --quant-mode sym_i8 --calibrate 1 \
-    --plan experiments/design_plan_qwen3-1.7b.json
+    --clip pct999 --plan experiments/design_plan_qwen3-1.7b.json
+
+echo "== continuous-batching smoke (multi-slot decode, slot reuse) =="
+python -m repro.launch.serve --arch qwen3-1.7b --smoke --requests 2 \
+    --prompt-len 3 --gen-len 4 --calibrate 1 --continuous 4
 
 echo "== quickstart =="
 python examples/quickstart.py

@@ -15,13 +15,15 @@ plan_designs -> apply_plan -> serve (launch/serve.py --plan).
 """
 from .observe import (CalibrationTable, Observer, calibrate,
                       calibrate_decode, observing, pscan, site_key)
-from .static import apply_calibration, attach_comp_cols, coverage
+from .static import (CLIP_MODES, act_quant_clipped, apply_calibration,
+                     attach_comp_cols, coverage)
 from .plan import (DesignPlan, apply_plan, design_cost,
                    make_plan_injector, plan_designs, recompose16_frontier,
                    weighted_med)
 
 __all__ = ["CalibrationTable", "Observer", "calibrate", "calibrate_decode",
            "observing", "pscan", "site_key", "apply_calibration",
+           "act_quant_clipped", "CLIP_MODES",
            "attach_comp_cols", "coverage", "DesignPlan", "apply_plan",
            "design_cost", "make_plan_injector", "plan_designs",
            "recompose16_frontier", "weighted_med"]

@@ -220,16 +220,19 @@ class CalibrationTable:
 # Scan routing + runner
 # ---------------------------------------------------------------------------
 
-def pscan(body, init, xs, length=None):
+def pscan(body, init, xs, length=None, unroll=1):
     """jax.lax.scan, except under an active calibration observer it is a
     Python loop (eager, concrete per-layer values) that pushes the slice
     index onto the observer's site-name stack.  The model's stacked-
     layer/expert scans route through this so calibration sees every
     layer by name; the serving/training graphs are untouched (observer
-    None -> verbatim lax.scan)."""
+    None -> verbatim lax.scan).  ``unroll`` forwards to lax.scan (the
+    serving decode step unrolls shallow layer stacks — transformer
+    _decoder_stack; training keeps the rolled scan for compile-time
+    O(1) in depth)."""
     obs = qlin.get_observer()
     if obs is None or not getattr(obs, "unroll", False):
-        return jax.lax.scan(body, init, xs, length=length)
+        return jax.lax.scan(body, init, xs, length=length, unroll=unroll)
     n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
     carry, ys = init, []
     for i in range(n):

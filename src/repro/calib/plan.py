@@ -498,6 +498,11 @@ def main(argv=None):
     ap.add_argument("--quant-mode", default="sym_i8",
                     choices=["asym_u8", "sym_i8"])
     ap.add_argument("--per-channel", action="store_true")
+    ap.add_argument("--clip", default="minmax",
+                    choices=["minmax", "pct999", "mse"],
+                    help="activation-range clipping calibrator to report "
+                         "(calib.static.act_quant_clipped; recorded in "
+                         "plan meta — serve.py --clip installs it)")
     ap.add_argument("--objective", default="pdaep",
                     choices=["pdaep", "budget"])
     ap.add_argument("--rel-tol", type=float, default=0.02)
@@ -528,9 +533,20 @@ def main(argv=None):
     if args.calib_out:
         table.save(args.calib_out)
         print(f"[plan] wrote calibration table to {args.calib_out}")
+    if args.clip != "minmax":
+        # surface what the clipping calibrator would change (the actual
+        # install happens at serve time: serve.py --clip)
+        shrunk = 0
+        for key in list(table.sites)[:]:
+            s_mm, _ = static_mod.act_quant_clipped(table, key, "minmax")
+            s_cl, _ = static_mod.act_quant_clipped(table, key, args.clip)
+            shrunk += s_cl < s_mm
+        print(f"[plan] clip={args.clip}: range shrunk on {shrunk}/"
+              f"{len(table.sites)} sites vs minmax")
 
     plan = plan_designs(table, qcfg, arch=args.arch,
                         objective=args.objective, rel_tol=args.rel_tol)
+    plan.meta["clip"] = args.clip
     if not args.no_recompose16:
         plan.recompose16 = recompose16_frontier()
     out = args.out or f"experiments/design_plan_{args.arch}.json"

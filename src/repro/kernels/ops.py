@@ -194,6 +194,65 @@ def approx_mul(a: jax.Array, b: jax.Array, design: str = "design2",
 
 
 # ---------------------------------------------------------------------------
+# Fused decode-step attention/cache op
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array, idx: jax.Array,
+                     *, n_heads: int, n_kv: int, head_dim: int,
+                     rope_theta: float = 10000.0, window=None,
+                     q_gain=None, k_gain=None, block_s: int = 128,
+                     lowering: str = "auto"):
+    """The fused decode-step attention/cache op: qk-norm + rope at the
+    slot's cache position + KV-cache append + masked single-query GQA
+    attention, one lowered body (the step-level twin of ``fused_qdot``).
+
+    q: (B, 1, n_heads, hd) pre-norm pre-rope; k/v: (B, 1, n_kv, hd).
+    idx: scalar int32 (uniform decode) or (B,) int32 per-slot cache
+    positions (batched multi-slot decode — the continuous-batching
+    driver's schedule).  ``lowering``: 'auto' (Pallas kernel on TPU, the
+    bit-matched blocked-XLA twin elsewhere), 'pallas', or 'xla'.
+
+    Returns (out (B, 1, n_heads*hd) f32, k_cache', v_cache').
+    """
+    idx = jnp.asarray(idx)
+    on_tpu = jax.default_backend() == "tpu"
+    if lowering == "pallas" or (lowering == "auto" and on_tpu):
+        from .attention import decode_attention_step
+        B = q.shape[0]
+        qk_norm = q_gain is not None
+        gains = (jnp.stack([jnp.asarray(q_gain), jnp.asarray(k_gain)])
+                 if qk_norm else jnp.ones((2, head_dim), jnp.float32))
+        pos = jnp.broadcast_to(idx.reshape(-1), (B,))
+        out, krow, vrow = decode_attention_step(
+            q.reshape(B, n_heads, head_dim),
+            k.reshape(B, n_kv, head_dim), v.reshape(B, n_kv, head_dim),
+            gains, k_cache, v_cache, pos, group=n_heads // max(n_kv, 1),
+            theta=rope_theta, window=window, qk_norm=qk_norm,
+            block_s=block_s)
+        # the kernel emits the roped cache-dtype rows; append them here
+        # (a (B, 1, Kv, hd) write — in place when the caller donates
+        # the cache buffers, as the TPU serve step does)
+        if idx.ndim == 1:
+            upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n[None], (i, 0, 0)))
+            ck = upd(k_cache, krow, idx)
+            cv = upd(v_cache, vrow, idx)
+        else:
+            ck = jax.lax.dynamic_update_slice(k_cache, krow[:, None],
+                                              (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(v_cache, vrow[:, None],
+                                              (0, idx, 0, 0))
+        return out.reshape(B, 1, n_heads * head_dim), ck, cv
+    if lowering not in ("auto", "xla"):
+        raise ValueError(lowering)
+    return ref.decode_attention_ref(
+        q, k, v, k_cache, v_cache, idx, n_heads=n_heads, n_kv=n_kv,
+        head_dim=head_dim, rope_theta=rope_theta, window=window,
+        q_gain=q_gain, k_gain=k_gain)
+
+
+# ---------------------------------------------------------------------------
 # Fused quantize -> delta -> dequant serving entry point
 # ---------------------------------------------------------------------------
 

@@ -167,6 +167,99 @@ def fused_qdot_ref(x, qw, dlut, scal, ntab, comp_r, offset: int = 0,
     return accf * (sx * sw)
 
 
+def _rmsnorm(x, gamma, eps: float = 1e-6):
+    """Mirror of models.layers.rmsnorm (kept local: ref.py stays pure
+    jnp with no model-layer imports — models imports kernels)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * gamma
+
+
+def _rope(x, positions, theta: float):
+    """Mirror of models.layers.rope. x: (B, S, H, D)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[:, :, None, None] * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def decode_attention_ref(q, k, v, k_cache, v_cache, idx, *, n_heads: int,
+                         n_kv: int, head_dim: int,
+                         rope_theta: float = 10000.0, window=None,
+                         q_gain=None, k_gain=None):
+    """XLA twin of kernels.attention.decode_attention_step — the fused
+    decode-step attention/cache op for non-TPU platforms.
+
+    One logical op covers what the decode step previously spread over
+    models.layers.attention: (optional) qk rmsnorm, rope at the slot's
+    cache position, the KV-cache append, and masked single-query GQA
+    attention over the cache.  The op sequence REPLICATES the generic
+    attention path bit for bit (same einsum contractions, same -1e30
+    mask + f32 softmax, new k/v read back through the cache dtype), so
+    routing the serve step through it changes nothing numerically —
+    asserted by tests/test_decode_attention.py.
+
+    q: (B, 1, n_heads, hd) pre-norm pre-rope query projection;
+    k, v: (B, 1, n_kv, hd) fresh key/value projections.
+    k_cache/v_cache: (B, S_max, n_kv, hd) (any float dtype; new rows are
+    cast on append exactly like the cache update they replace).
+    idx: scalar int32 — the uniform cache position — or (B,) int32
+    per-slot positions (batched MULTI-SLOT decode: each request sits at
+    its own depth, what the continuous-batching driver schedules).
+    window: optional sliding-window size.  q_gain/k_gain: qk-norm gains.
+
+    Returns (out (B, 1, n_heads*hd) f32, k_cache', v_cache').
+    """
+    import math
+    B, S = q.shape[:2]
+    per_slot = idx.ndim == 1
+    positions = (idx[:, None] + jnp.arange(S)) if per_slot \
+        else (idx + jnp.arange(S))
+    if q_gain is not None:
+        q = _rmsnorm(q, q_gain)
+        k = _rmsnorm(k, k_gain)
+    if rope_theta:
+        q = _rope(q, positions, rope_theta)
+        k = _rope(k, positions, rope_theta)
+    if per_slot:
+        upd = jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+        ck = upd(k_cache, k.astype(k_cache.dtype), idx)
+        cv = upd(v_cache, v.astype(v_cache.dtype), idx)
+    else:
+        ck = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                          (0, idx, 0, 0))
+    S_k = ck.shape[1]
+    group = n_heads // max(n_kv, 1)
+    qg = q.reshape(B, S, n_kv, group, head_dim)
+    lg = jnp.einsum("bsngd,btnd->bngst", qg, ck) / math.sqrt(head_dim)
+    kpos = jnp.arange(S_k)
+    kv_limit = idx + S
+    if per_slot:
+        m = (kpos[None, None, :] <= positions[:, :, None]) \
+            & (kpos[None, None, :] < kv_limit[:, None, None])
+        if window is not None:
+            m = m & (kpos[None, None, :] > positions[:, :, None] - window)
+        mb = m[:, None, None]                       # (B, 1, 1, S, S_k)
+    else:
+        m = (kpos[None, :] <= positions[:, None]) \
+            & (kpos[None, :] < kv_limit)
+        if window is not None:
+            m = m & (kpos[None, :] > positions[:, None] - window)
+        mb = m[None, None, None]
+    lg = jnp.where(mb, lg, -1e30)
+    pr = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", pr, cv)
+    return out.reshape(B, S, n_heads * head_dim), ck, cv
+
+
 def residual_corrected_matmul_ref(a, b, F: np.ndarray, G: np.ndarray,
                                   offset: int = 0):
     """Beyond-paper fast path oracle: exact matmul + rank-r error model.

@@ -169,8 +169,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 donate_argnums=(0, 1))
             lowered = jitted.lower(p_abs, o_abs, specs)
         elif kind == "prefill":
-            from repro.train import make_prefill_step
-            step = make_prefill_step(cfg, qcfg)
+            from repro.train import make_prefill_logits
+            step = make_prefill_logits(cfg, qcfg)
             jitted = jax.jit(step, in_shardings=(p_shard, in_shard))
             lowered = jitted.lower(p_abs, specs)
         else:  # decode

@@ -1,8 +1,17 @@
-"""Batched-request serving driver: prefill + decode loop with a KV/state
-cache, greedy sampling, continuous-batching-style slot reuse.
+"""Batched-request serving driver: fused full-sequence prefill + batched
+decode loop with a KV/state cache, greedy sampling, and continuous-
+batching slot reuse.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 4 --gen-len 16
+
+Prefill runs the WHOLE prompt as one M = B·S pass through the decode
+stack (train.make_prefill_step): causal attention over the fresh KV
+block, cache written in one slice, and a decode handoff bit-identical
+to stepping the prompt token by token (--prefill loop keeps the old
+per-token path for A/B).  The decode step's attention/rope/cache-append
+runs through the fused decode-attention op (kernels.ops.decode_attention
+— Pallas on TPU, bit-matched XLA twin elsewhere).
 
 Quantization precomputation ladder (see quant/linear.py):
   --prequantize      cache weight quantization once (q/scale/zp/colsum)
@@ -10,6 +19,9 @@ Quantization precomputation ladder (see quant/linear.py):
   --calibrate N      run N calibration batches through the decode path
                      and fix STATIC per-layer activation scales (drops
                      the per-token min/max reduction from the step)
+  --clip MODE        activation-range calibrator: minmax (default) |
+                     pct999 (99.9th percentile) | mse (MSE-optimal),
+                     selected from the calibration histograms
   --plan FILE        load a DesignPlan (repro.calib.plan / scripts/
                      make_plan.sh) and serve a per-layer MIXED-design
                      decode: each scanned layer gathers its own
@@ -19,10 +31,22 @@ Quantization precomputation ladder (see quant/linear.py):
 With static scales installed (--calibrate / --plan) the backend
 defaults to 'fused': one kernel quantizes the activations, runs the
 two-stage exact-dot + delta-gather (the plan's per-layer tables ride
-the scan as kernel operands) and dequantizes in the epilogue.  Pass an
-explicit --backend to A/B the unfused pipeline.  Serving always runs
-qdot in inference mode (the exact STE matmul — a training-only
-gradient vehicle that never changes the output — is skipped).
+the scan as kernel operands) and dequantizes in the epilogue, and the
+attention wq|wk|wv / mlp gate|up projections are MERGED into single
+calls (quant.fuse_projections — bit-identical per column; disable with
+--no-fuse-proj to A/B).  Pass an explicit --backend to A/B the unfused
+pipeline.  Serving always runs qdot in inference mode (the exact STE
+matmul — a training-only gradient vehicle that never changes the
+output — is skipped).
+
+--continuous N serves N total requests through the --requests slots
+with per-slot cache positions (batched multi-slot decode): a slot that
+finishes its generation is immediately re-prefilled with the next
+queued request while the other slots keep decoding.
+
+Timing is steady-state: both steps are AOT-compiled up front and the
+compile time is reported separately (it used to be silently folded
+into the first-call tok/s).
 """
 from __future__ import annotations
 
@@ -36,7 +60,7 @@ import numpy as np
 from repro import configs
 from repro.models import transformer as T
 from repro.quant import QuantConfig
-from repro.train import make_serve_step
+from repro.train import make_prefill_step, make_serve_step
 
 
 def _calibration_prompts(cfg, rng, batches: int, requests: int,
@@ -52,7 +76,7 @@ def prepare_params(params, cfg, qcfg, args):
     Calibration draws from its OWN rng so enabling --calibrate never
     shifts the serving-prompt stream (A/B runs with and without it see
     identical requests)."""
-    from repro.quant import prequantize_weights
+    from repro.quant import fuse_projections, prequantize_weights
     notes = []
     wrap = args.prequantize or args.calibrate or args.plan
     if not wrap:
@@ -75,9 +99,9 @@ def prepare_params(params, cfg, qcfg, args):
             t = calibrate_decode(params, cfg, qcfg, prompts,
                                  gen_len=2, enc_frontend=enc_frontend)
             table = t if table is None else table.merge(t)
-        params = apply_calibration(params, table)
+        params = apply_calibration(params, table, clip=args.clip)
         notes.append(f"static act scales ({len(table.sites)} sites, "
-                     f"{args.calibrate} calib batches)")
+                     f"{args.calibrate} calib batches, clip={args.clip})")
     if args.plan:
         from repro.calib import DesignPlan, apply_plan
         plan = DesignPlan.load(args.plan)
@@ -90,7 +114,106 @@ def prepare_params(params, cfg, qcfg, args):
         from repro.calib import attach_comp_cols
         params = attach_comp_cols(params, qcfg)
         notes.append("fused backend (cached compensation colsums)")
+    if not args.no_fuse_proj:
+        params = fuse_projections(params)
+        notes.append("merged wq|wk|wv -> wqkv, w_gate|w_up -> w_gateup "
+                     "(fuse_projections)")
     return params, notes
+
+
+def _donate():
+    """Donate the decode state into the jitted steps on TPU (the KV
+    caches update in place — at real model scale the state is the
+    memory budget).  On CPU donation is measured SLOWER for chained
+    decode (buffer reallocation per step) and the smoke-scale state is
+    tiny, so keep the buffers."""
+    return (1,) if jax.default_backend() == "tpu" else ()
+
+
+def _scatter_slot(state, one, slot: int):
+    """Write a freshly-prefilled single-slot state into batched ``state``
+    at ``slot`` (cache leaves are stacked (n_units, B, ...))."""
+    def put(full, new):
+        return full.at[:, slot].set(new[:, 0])
+    caches = [jax.tree.map(put, c_full, c_one)
+              for c_full, c_one in zip(state["caches"], one["caches"])]
+    return dict(state, caches=caches)
+
+
+def serve_continuous(params, cfg, qcfg, args, rng):
+    """Continuous batching: --continuous N requests through --requests
+    slots.  Per-slot cache positions (init_decode_state per_slot=True)
+    let every slot sit at its own depth; a finished slot is immediately
+    re-prefilled with the next queued request while the rest decode."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("--continuous: encdec requests carry "
+                                  "per-request encoder state")
+    P, G = args.prompt_len, args.gen_len
+    N = args.continuous
+    B = min(args.requests, N)
+    prompts = rng.integers(0, cfg.vocab, (N, P)).astype(np.int32)
+    s_max = P + 2 * G + 2          # slack: idle slots keep stepping
+    prefill = jax.jit(make_prefill_step(cfg, qcfg))
+    prefill1 = jax.jit(make_prefill_step(cfg, qcfg))   # B=1 refill
+    serve = jax.jit(make_serve_step(cfg, qcfg))
+
+    # compile + warm up all three steps before the timed serve (same
+    # steady-state policy as the main path; compile gets its own line)
+    t0 = time.perf_counter()
+    warm = T.init_decode_state(cfg, B, s_max, per_slot=True)
+    tok_w, _, warm = prefill(params, warm, jnp.asarray(prompts[:B]))
+    jax.block_until_ready(serve(params, warm, tok_w)[0])
+    warm1 = T.init_decode_state(cfg, 1, s_max, per_slot=True)
+    jax.block_until_ready(
+        prefill1(params, warm1, jnp.asarray(prompts[:1]))[0])
+    del warm, warm1
+    print(f"[serve] compile+warmup: {time.perf_counter() - t0:.2f}s "
+          f"(reported separately)")
+
+    t0 = time.perf_counter()
+    state = T.init_decode_state(cfg, B, s_max, per_slot=True)
+    tok, logits, state = prefill(params, state,
+                                 jnp.asarray(prompts[:B]))
+    slot_req = list(range(B))                 # request id per slot
+    produced = {r: [] for r in range(B)}
+    next_req = B
+    steps = 0
+    while any(r is not None for r in slot_req):
+        # harvest the slots' current tokens, refilling finished slots
+        # (the refill's own prefill token is recorded here — the next
+        # batched step consumes it to produce the slot's second token)
+        toks = np.asarray(tok)
+        for slot, r in enumerate(slot_req):
+            if r is None:
+                continue
+            produced[r].append(int(toks[slot, 0]))
+            while slot_req[slot] is not None and \
+                    len(produced[slot_req[slot]]) >= G:
+                if next_req < N:          # slot reuse: prefill the next
+                    st1 = T.init_decode_state(cfg, 1, s_max,
+                                              per_slot=True)
+                    t1, _, st1 = prefill1(
+                        params, st1,
+                        jnp.asarray(prompts[next_req:next_req + 1]))
+                    state = _scatter_slot(state, st1, slot)
+                    tok = tok.at[slot].set(t1[0])
+                    slot_req[slot] = next_req
+                    produced[next_req] = [int(np.asarray(t1)[0, 0])]
+                    next_req += 1
+                else:
+                    slot_req[slot] = None
+        if all(r is None for r in slot_req):
+            break
+        tok, logits, state = serve(params, state, tok)
+        steps += 1
+    dt = time.perf_counter() - t0
+    out = np.asarray([produced[r] for r in range(N)], np.int32)
+    toks_total = N * (P + G)
+    print(f"[serve] continuous: {N} requests over {B} slots, "
+          f"{steps} batched decode steps: {dt:.2f}s, "
+          f"{toks_total / dt:.1f} tok/s")
+    print("[serve] sample output ids:", out[0][:12].tolist())
+    return out, np.asarray(logits)
 
 
 def main(argv=None):
@@ -119,8 +242,25 @@ def main(argv=None):
     ap.add_argument("--calibrate", type=int, default=0, metavar="N",
                     help="run N calibration batches and serve with "
                          "STATIC activation scales (repro.calib)")
+    ap.add_argument("--clip", default="minmax",
+                    choices=["minmax", "pct999", "mse"],
+                    help="activation-range calibrator for --calibrate "
+                         "(calib.static.act_quant_clipped)")
     ap.add_argument("--plan", default=None, metavar="FILE",
                     help="DesignPlan JSON: per-layer mixed-design decode")
+    ap.add_argument("--prefill", default="fused",
+                    choices=["fused", "loop"],
+                    help="prompt processing: 'fused' = one full-sequence "
+                         "M=B·S pass (default), 'loop' = the old token-"
+                         "by-token decode loop (A/B; bit-identical)")
+    ap.add_argument("--no-fuse-proj", action="store_true",
+                    help="keep wq/wk/wv and w_gate/w_up as separate qdot "
+                         "calls (A/B the merged-projection serving tree)")
+    ap.add_argument("--continuous", type=int, default=None, metavar="N",
+                    help="continuous batching: serve N total requests "
+                         "through --requests slots with per-slot cache "
+                         "positions (finished slots re-prefill from the "
+                         "queue)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -135,11 +275,14 @@ def main(argv=None):
 
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
     params, notes = prepare_params(params, cfg, qcfg, args)
     for n in notes:
         print(f"[serve] {n}")
 
+    if args.continuous:
+        return serve_continuous(params, cfg, qcfg, args, rng)
+
+    prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
     enc_out = None
     if cfg.family == "encdec":
         fr = jnp.asarray(rng.normal(size=(
@@ -147,23 +290,56 @@ def main(argv=None):
         enc_out = T._run_encoder(params, fr, cfg, qcfg)
 
     state = T.init_decode_state(cfg, B, s_max, enc_out=enc_out)
-    serve = jax.jit(make_serve_step(cfg, qcfg), donate_argnums=(1,))
+    serve_c = jax.jit(make_serve_step(cfg, qcfg), donate_argnums=_donate())
+    prefill_c = jax.jit(make_prefill_step(cfg, qcfg),
+                        donate_argnums=_donate())
+    prompts_dev = jnp.asarray(prompts)
+    tok0 = jnp.zeros((B, 1), jnp.int32)
 
-    # prefill by stepping tokens (simple loop; prefill kernel covers bulk)
-    tok = None
+    # compile + warm up BOTH steps on a throwaway state so the loop
+    # below measures steady state (first execution pays lazy init);
+    # compile time is reported on its own line, not inside tok/s
     t0 = time.perf_counter()
-    for i in range(args.prompt_len):
-        tok, logits, state = serve(params, state,
-                                   jnp.asarray(prompts[:, i:i + 1]))
+    warm = T.init_decode_state(cfg, B, s_max, enc_out=enc_out)
+    if args.prefill == "fused":
+        # chain through the (possibly donated) warm state
+        _, _, warm = prefill_c(params, warm, prompts_dev)
+    jax.block_until_ready(serve_c(params, warm, tok0)[0])
+    del warm
+    t_compile = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if args.prefill == "fused":
+        tok, logits, state = prefill_c(params, state, prompts_dev)
+    else:
+        for i in range(args.prompt_len):
+            tok, logits, state = serve_c(params, state,
+                                         jnp.asarray(prompts[:, i:i + 1]))
+    tok.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
     generated = [tok]
     for _ in range(args.gen_len - 1):
-        tok, logits, state = serve(params, state, tok)
+        tok, logits, state = serve_c(params, state, tok)
         generated.append(tok)
     out = jnp.concatenate(generated, axis=1)
-    dt = time.perf_counter() - t0
-    toks = B * (args.prompt_len + args.gen_len)
+    out.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    n_pre = B * args.prompt_len
+    n_dec = B * args.gen_len
+    print(f"[serve] compile+warmup: {t_compile:.2f}s (reported separately "
+          f"— steady-state rows below exclude it)")
+    print(f"[serve] prefill[{args.prefill}]: {n_pre} tokens in "
+          f"{t_prefill * 1e3:.1f}ms ({n_pre / t_prefill:.1f} tok/s, "
+          f"{t_prefill * 1e6 / n_pre:.1f} us/tok)")
+    print(f"[serve] decode: {n_dec} tokens in {t_decode * 1e3:.1f}ms "
+          f"({n_dec / t_decode:.1f} tok/s, "
+          f"{t_decode * 1e6 / max(args.gen_len - 1, 1):.1f} us/step)")
+    dt = t_prefill + t_decode
     print(f"[serve] {B} requests, {args.gen_len} tokens each: "
-          f"{dt:.2f}s total, {toks/dt:.1f} tok/s")
+          f"{dt:.2f}s steady-state, {(n_pre + n_dec) / dt:.1f} tok/s")
     print("[serve] sample output ids:", np.asarray(out[0])[:12].tolist())
     return np.asarray(out), np.asarray(logits)
 

@@ -78,14 +78,43 @@ def attention(p, x, positions, qcfg: QuantConfig, *, n_heads: int, n_kv: int,
     cross_kv: precomputed (k, v) for encoder-decoder cross attention.
     """
     B, S, _ = x.shape
+    idx = cache["idx"] if cache is not None else None
+    per_slot = idx is not None and idx.ndim == 1
     if positions is None and cache is not None:
-        positions = cache["idx"] + jnp.arange(S)
-    q = _split_heads(qdot(x, p["wq"], qcfg), n_heads, head_dim)
-    if cross_kv is None:
-        k = _split_heads(qdot(x, p["wk"], qcfg), n_kv, head_dim)
-        v = _split_heads(qdot(x, p["wv"], qcfg), n_kv, head_dim)
+        positions = (idx[:, None] + jnp.arange(S)) if per_slot \
+            else (idx + jnp.arange(S))
+    if cross_kv is None and "wqkv" in p:
+        # serving-time merged projection (quant.linear.fuse_projections):
+        # one qdot, split by head counts — per-column outputs are
+        # bit-identical to the three separate calls
+        qkv = qdot(x, p["wqkv"], qcfg)
+        q, k, v = jnp.split(
+            qkv, [n_heads * head_dim, (n_heads + n_kv) * head_dim], axis=-1)
+        q = _split_heads(q, n_heads, head_dim)
+        k = _split_heads(k, n_kv, head_dim)
+        v = _split_heads(v, n_kv, head_dim)
     else:
-        k, v = cross_kv
+        q = _split_heads(qdot(x, p["wq"], qcfg), n_heads, head_dim)
+        if cross_kv is None:
+            k = _split_heads(qdot(x, p["wk"], qcfg), n_kv, head_dim)
+            v = _split_heads(qdot(x, p["wv"], qcfg), n_kv, head_dim)
+        else:
+            k, v = cross_kv
+
+    if cache is not None and S == 1 and cross_kv is None:
+        # fused decode step: qk-norm + rope + cache append + masked
+        # single-query attention in one lowered body (Pallas on TPU,
+        # bit-matched XLA twin elsewhere) — kernels.ops.decode_attention
+        from repro.kernels import ops as kops
+        out, ck, cv = kops.decode_attention(
+            q, k, v, cache["k"], cache["v"], idx, n_heads=n_heads,
+            n_kv=n_kv, head_dim=head_dim,
+            rope_theta=rope_theta if rope_theta else 0.0, window=window,
+            q_gain=p.get("q_norm") if qk_norm else None,
+            k_gain=p.get("k_norm") if qk_norm else None)
+        new_cache = {"k": ck, "v": cv, "idx": idx + S}
+        return qdot(out, p["wo"], qcfg), new_cache
+
     if qk_norm:
         q = rmsnorm(q, p["q_norm"])
         if cross_kv is None:
@@ -99,11 +128,16 @@ def attention(p, x, positions, qcfg: QuantConfig, *, n_heads: int, n_kv: int,
 
     new_cache = None
     if cache is not None:
-        idx = cache["idx"]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, idx, 0, 0))
+        if per_slot:
+            upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n, (i, 0, 0)))
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), idx)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
         new_cache = {"k": ck, "v": cv, "idx": idx + S}
         k, v = ck, cv
 
@@ -112,8 +146,8 @@ def attention(p, x, positions, qcfg: QuantConfig, *, n_heads: int, n_kv: int,
     qg = q.reshape(B, S, n_kv, group, head_dim)
 
     if cache is not None:
-        qpos = cache["idx"] + jnp.arange(S)
-        kv_limit = cache["idx"] + S
+        qpos = positions                      # (S,) or per-slot (B, S)
+        kv_limit = idx + S
     elif positions is None:  # non-causal cross attention: mask is all-ones
         qpos = jnp.arange(S)
         kv_limit = None
@@ -128,21 +162,30 @@ def attention(p, x, positions, qcfg: QuantConfig, *, n_heads: int, n_kv: int,
         query block (sq x S_k), never the full S x S_k surface."""
         lg = jnp.einsum("bsngd,btnd->bngst", q_blk, k) / math.sqrt(head_dim)
         kpos = jnp.arange(S_k)
-        if kv_limit is not None:
-            m = (kpos[None, :] <= qpos_blk[:, None]) & \
-                (kpos[None, :] < kv_limit)
-        elif causal:
-            m = kpos[None, :] <= qpos_blk[:, None]
+        if qpos_blk is not None and qpos_blk.ndim == 2:
+            # per-slot cache positions: mask varies over the batch
+            m = (kpos[None, None, :] <= qpos_blk[:, :, None]) & \
+                (kpos[None, None, :] < kv_limit[:, None, None])
+            if window is not None:
+                m = m & (kpos[None, None, :] > qpos_blk[:, :, None] - window)
+            mb = m[:, None, None]             # (B, 1, 1, sq, S_k)
         else:
-            m = jnp.ones((q_blk.shape[1], S_k), bool)
-        if window is not None:
-            m = m & (kpos[None, :] > qpos_blk[:, None] - window)
-        lg = jnp.where(m[None, None, None], lg, -1e30)
+            if kv_limit is not None:
+                m = (kpos[None, :] <= qpos_blk[:, None]) & \
+                    (kpos[None, :] < kv_limit)
+            elif causal:
+                m = kpos[None, :] <= qpos_blk[:, None]
+            else:
+                m = jnp.ones((q_blk.shape[1], S_k), bool)
+            if window is not None:
+                m = m & (kpos[None, :] > qpos_blk[:, None] - window)
+            mb = m[None, None, None]
+        lg = jnp.where(mb, lg, -1e30)
         pr = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)
         return jnp.einsum("bngst,btnd->bsngd", pr, v)
 
     CHUNK = 512
-    if S > CHUNK and S % CHUNK == 0:
+    if S > CHUNK and S % CHUNK == 0 and qpos.ndim == 1:
         n_blk = S // CHUNK
         qb = qg.reshape(B, n_blk, CHUNK, n_kv, group, head_dim)
         qb = jnp.moveaxis(qb, 1, 0)              # (n_blk, B, CHUNK, ...)
@@ -156,10 +199,16 @@ def attention(p, x, positions, qcfg: QuantConfig, *, n_heads: int, n_kv: int,
 
 
 def make_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, per_slot: bool = False):
+    """KV cache. ``per_slot=True`` gives each batch slot its own cache
+    position (idx (B,) instead of scalar) — batched multi-slot decode,
+    where the continuous-batching driver keeps requests at different
+    depths in the same step."""
+    idx = (jnp.zeros((batch,), jnp.int32) if per_slot
+           else jnp.zeros((), jnp.int32))
     return {"k": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
             "v": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
-            "idx": jnp.zeros((), jnp.int32)}
+            "idx": idx}
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +226,14 @@ def mlp_init(rng, d_model: int, d_ff: int, kind: str):
 
 
 def mlp(p, x, qcfg: QuantConfig, kind: str):
-    if kind == "geglu":
+    if kind in ("geglu", "swiglu") and "w_gateup" in p:
+        # merged gate|up projection (quant.linear.fuse_projections):
+        # one qdot, split down the middle — bit-identical per column
+        act = jax.nn.gelu if kind == "geglu" else jax.nn.silu
+        gu = qdot(x, p["w_gateup"], qcfg)
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = act(g) * u
+    elif kind == "geglu":
         h = jax.nn.gelu(qdot(x, p["w_gate"], qcfg)) * qdot(x, p["w_up"], qcfg)
     elif kind == "swiglu":
         h = jax.nn.silu(qdot(x, p["w_gate"], qcfg)) * qdot(x, p["w_up"], qcfg)

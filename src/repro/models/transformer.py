@@ -321,7 +321,12 @@ def _decoder_stack(params, x, positions, cfg: ArchConfig, qcfg: QuantConfig,
         from .sharding import remat_active
         if remat_active():
             body = jax.checkpoint(body)
-        (x, aux_total), nc = pscan(body, (x, aux_total), xs)
+        # pure-inference steps unroll shallow layer stacks: XLA schedules
+        # across layers and the scan machinery drops out of the decode
+        # floor (~2-3% at smoke scale); training keeps the rolled scan
+        # (compile-time O(1) in depth)
+        unroll = cfg.n_units if (qcfg.inference and cfg.n_units <= 8) else 1
+        (x, aux_total), nc = pscan(body, (x, aux_total), xs, unroll=unroll)
         new_caches.append(nc)
     return x, new_caches, aux_total
 
@@ -368,7 +373,14 @@ def forward_train(params, batch, cfg: ArchConfig, qcfg: QuantConfig):
 
 
 def forward_decode(params, state, tokens, cfg: ArchConfig, qcfg: QuantConfig):
-    """One decode step. tokens: (B, 1). state from init_decode_state."""
+    """One decode step — or a full-sequence PREFILL: tokens (B, S) with
+    S > 1 runs the whole block causally against the fresh KV region in
+    ONE pass (cache written in one slice, positions from the cache idx),
+    which is exactly the fused-prefill regime: every qdot sees M = B·S
+    rows, where the fused kernel's compute-scale win applies.  The
+    decode state handed back is bit-identical to stepping the same
+    tokens one by one (tests/test_prefill.py).  state from
+    init_decode_state."""
     B, S = tokens.shape
     x = layers.embed(params["embed"], tokens)
     positions = None  # decode positions come from caches (idx)
@@ -390,11 +402,15 @@ def _stack_tree(tree, n: int):
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, s_max: int,
-                      enc_out=None) -> Dict:
+                      enc_out=None, per_slot: bool = False) -> Dict:
+    """``per_slot=True`` gives each batch slot an independent cache
+    position (continuous batching: slots prefill/decode at their own
+    depths; see launch/serve.py --continuous)."""
     caches = []
     for kind in cfg.pattern:
         if kind in ("attn", "moe"):
-            one = layers.make_cache(batch, s_max, cfg.n_kv, cfg.hd)
+            one = layers.make_cache(batch, s_max, cfg.n_kv, cfg.hd,
+                                    per_slot=per_slot)
         elif kind == "rec":
             one = recurrent.rglru_state(batch, cfg.d_rnn)
         elif kind == "mlstm":

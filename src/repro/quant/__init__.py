@@ -1,10 +1,12 @@
 from .quantize import (QuantConfig, quantize_uint8, quantize_int8,
                        dequantize, dequantize_int8, fake_quant)
-from .linear import (QuantizedWeight, prequantize_weights, qdot,
-                     qeinsum_heads, set_observer, get_observer,
-                     is_dense_weight, walk_dense)
+from .linear import (QuantizedWeight, fuse_projections,
+                     prequantize_weights, qdot, qeinsum_heads,
+                     set_observer, get_observer, is_dense_weight,
+                     walk_dense)
 
 __all__ = ["QuantConfig", "quantize_uint8", "quantize_int8", "dequantize",
            "dequantize_int8", "fake_quant", "qdot", "qeinsum_heads",
            "QuantizedWeight", "prequantize_weights", "set_observer",
-           "get_observer", "is_dense_weight", "walk_dense"]
+           "get_observer", "is_dense_weight", "walk_dense",
+           "fuse_projections"]

@@ -156,7 +156,8 @@ class QuantizedWeight:
                  act_scale=None, act_zp=None, dlut=None,
                  comp_r=None, comp_c=None, comp_mu=None, comp_col=None,
                  mode: str = "asym_u8", path: str = "",
-                 per_channel: bool = False, dlut_bank=None):
+                 per_channel: bool = False, dlut_bank=None,
+                 merged: bool = False):
         self.w = w
         self.q = q
         self.scale = scale
@@ -173,6 +174,11 @@ class QuantizedWeight:
         self.path = path
         self.per_channel = per_channel
         self.dlut_bank = dlut_bank
+        # fuse_projections output: scales are stored per-column (a
+        # blockwise broadcast of the member projections' scales), so the
+        # per_channel flag intentionally differs from the serving
+        # QuantConfig — the stale-cache check skips merged wrappers
+        self.merged = merged
 
     @property
     def ndim(self):
@@ -189,7 +195,7 @@ class QuantizedWeight:
                  comp_c=self.comp_c, comp_mu=self.comp_mu,
                  comp_col=self.comp_col, mode=self.mode,
                  path=self.path, per_channel=self.per_channel,
-                 dlut_bank=self.dlut_bank)
+                 dlut_bank=self.dlut_bank, merged=self.merged)
         d.update(kw)
         return QuantizedWeight(**d)
 
@@ -198,13 +204,13 @@ class QuantizedWeight:
                     self.act_scale, self.act_zp, self.dlut,
                     self.comp_r, self.comp_c, self.comp_mu, self.comp_col)
         return children, (self.mode, self.path, self.per_channel,
-                          self.dlut_bank)
+                          self.dlut_bank, self.merged)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        mode, path, per_channel, dlut_bank = aux
+        mode, path, per_channel, dlut_bank, merged = aux
         return cls(*children, mode=mode, path=path, per_channel=per_channel,
-                   dlut_bank=dlut_bank)
+                   dlut_bank=dlut_bank, merged=merged)
 
     def __repr__(self):
         extras = [k for k in ("act_scale", "dlut")
@@ -420,7 +426,8 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     if pre is not None:
         w = pre.w
         if pre.mode != cfg.mode or (
-                pre.q is not None and pre.per_channel != cfg.w_per_channel):
+                pre.q is not None and not pre.merged
+                and pre.per_channel != cfg.w_per_channel):
             _warn_stale(pre, cfg)   # loud: requantizing every step
             pre = None
     if _OBSERVER is not None and pre is not None:
@@ -441,6 +448,18 @@ def qdot(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
     return y_ste + jax.lax.stop_gradient(y - y_ste)
 
 
+def _act_axis(x, cfg: QuantConfig):
+    """Reduce axes for DYNAMIC activation quantization.  Default: all
+    axes (one scale per call — what the token-by-token decode step
+    computes over its (B, 1, K) block).  With cfg.act_per_pos and a
+    sequence axis present, every axis EXCEPT the sequence one, so a
+    full-sequence prefill gives each position the scale its own decode
+    step would have computed (bit-identical handoff; train.step)."""
+    if cfg.act_per_pos and x.ndim >= 3:
+        return tuple(i for i in range(x.ndim) if i != x.ndim - 2)
+    return None
+
+
 def _quantize_act_static(x, pre, lo, hi):
     """Quantize activations with the calibrated STATIC (scale, zp): no
     per-token min/max reduction in the decode graph."""
@@ -459,7 +478,7 @@ def _qdot_asym(x, w, cfg, pre=None):
     if pre is not None and pre.act_scale is not None:
         qx, sx, zx = _quantize_act_static(x, pre, 0, 255)
     else:
-        qx, sx, zx = quantize_uint8(x)
+        qx, sx, zx = quantize_uint8(x, _act_axis(x, cfg))
     if pre is not None and pre.q is not None:
         qw = pre.q
         sw = _wparam(pre.scale, pre.per_channel)
@@ -498,7 +517,7 @@ def _qdot_signed(x, w, cfg, pre=None):
     if pre is not None and pre.act_scale is not None:
         qx, sx, _ = _quantize_act_static(x, pre, -128, 127)
     else:
-        qx, sx = quantize_int8(x)
+        qx, sx = quantize_int8(x, _act_axis(x, cfg))
     if pre is not None and pre.q is not None:
         qw, sw = pre.q, _wparam(pre.scale, pre.per_channel)
     else:
@@ -519,6 +538,125 @@ def _qdot_signed(x, w, cfg, pre=None):
                 - K * mu)
         prod = prod - comp
     return prod * (sx * sw)
+
+
+def _bcast_col(p, lead, n: int):
+    """Broadcast a cached weight-quant parameter to an explicit
+    per-column (…, 1, n) table (per-tensor scalars fan out; per-channel
+    rows pass through)."""
+    if p is None:
+        return None
+    p = jnp.asarray(p)
+    return jnp.broadcast_to(p.reshape(*lead, 1, -1), (*lead, 1, n))
+
+
+def _merge_group(parts, name: str):
+    """Concatenate a group of prequantized SAME-INPUT projections into
+    one QuantizedWeight along the output axis, or return None when the
+    group is not safely mergeable.  Per-column epilogue parameters
+    (scale/zp/colsum/comp_col) keep each member's values on its own
+    column block, so the merged qdot output is bit-identical per column
+    to the separate calls (asserted in tests/test_decode_attention.py).
+    """
+    import numpy as np
+    if not all(isinstance(p, QuantizedWeight) and p.q is not None
+               for p in parts):
+        return None
+    lead = tuple(int(d) for d in parts[0].w.shape[:-2])
+    K = parts[0].w.shape[-2]
+    if any(p.mode != parts[0].mode or tuple(p.w.shape[:-2]) != lead
+           or p.w.shape[-2] != K for p in parts):
+        return None
+    # the members consume the SAME activations, so calibrated static
+    # quantizers must agree — they do by construction (same observer
+    # input), but a hand-edited tree might differ: refuse, don't drift
+    acts = [p.act_scale for p in parts]
+    if any((a is None) != (acts[0] is None) for a in acts):
+        return None
+    if acts[0] is not None and not all(
+            np.array_equal(np.asarray(a), np.asarray(acts[0]))
+            for a in acts[1:]):
+        return None
+    # per-layer design plans: mergeable only when every member gathers
+    # the same delta table on every layer (one table per fused call)
+    dluts = [p.dlut for p in parts]
+    if any(d is not None for d in dluts):
+        if any(d is None or p.dlut_bank is None
+               for d, p in zip(dluts, parts)):
+            return None
+        banks = [np.asarray(get_dlut_bank(p.dlut_bank)) for p in parts]
+        idxs = [np.asarray(p.dlut).reshape(-1) for p in parts]
+        for li in range(idxs[0].size):
+            t0 = banks[0][idxs[0][li]]
+            if not all(np.array_equal(b[i[li]], t0)
+                       for b, i in zip(banks[1:], idxs[1:])):
+                return None
+    ns = [int(p.w.shape[-1]) for p in parts]
+    comp_cols = [p.comp_col for p in parts]
+    merged_comp_col = (jnp.concatenate(comp_cols, axis=-1)
+                       if all(c is not None for c in comp_cols) else None)
+    prefix = parts[0].path.rsplit(".", 1)[0] if "." in parts[0].path else ""
+    base = parts[0]
+    return QuantizedWeight(
+        w=jnp.concatenate([p.w for p in parts], axis=-1),
+        q=jnp.concatenate([p.q for p in parts], axis=-1),
+        scale=jnp.concatenate(
+            [_bcast_col(p.scale, lead, n) for p, n in zip(parts, ns)],
+            axis=-1),
+        zp=(jnp.concatenate(
+            [_bcast_col(p.zp, lead, n) for p, n in zip(parts, ns)],
+            axis=-1) if base.zp is not None else None),
+        colsum=(jnp.concatenate([p.colsum for p in parts], axis=-1)
+                if base.colsum is not None else None),
+        act_scale=base.act_scale, act_zp=base.act_zp,
+        dlut=base.dlut, dlut_bank=base.dlut_bank,
+        comp_r=base.comp_r, comp_c=base.comp_c, comp_mu=base.comp_mu,
+        comp_col=merged_comp_col, mode=base.mode,
+        path=(prefix + "." if prefix else "") + name,
+        per_channel=True, merged=True)
+
+
+def fuse_projections(params):
+    """Serving-time projection merging over the decoder units: attention
+    wq|wk|wv -> wqkv and (GLU) mlp w_gate|w_up -> w_gateup, concatenated
+    along the output axis.  At decode scale (M = B tokens) every qdot
+    call pays fixed dispatch/gather-setup cost, so 7 calls per layer
+    becoming 4 is a direct cut at the step-level floor; outputs are
+    bit-identical per column (the merged wrapper carries each member's
+    scale/zp/colsum on its own column block).  Groups that are not
+    safely mergeable — un-prequantized weights, mixed-design plan layers
+    whose members gather different tables, MoE expert stacks (their
+    scan consumes separate operands) — are left untouched.  Apply AFTER
+    the rest of the precomputation ladder (prequantize -> calibrate ->
+    plan -> comp cols); launch/serve.py does this by default
+    (--no-fuse-proj to A/B)."""
+    def visit(node):
+        if isinstance(node, dict):
+            node = {k: visit(v) for k, v in node.items()}
+            if "router" in node:          # MoE dict: expert stacks stay
+                return node
+            if all(k in node for k in ("wq", "wk", "wv")):
+                m = _merge_group([node["wq"], node["wk"], node["wv"]],
+                                 "wqkv")
+                if m is not None:
+                    node = {k: v for k, v in node.items()
+                            if k not in ("wq", "wk", "wv")}
+                    node["wqkv"] = m
+            if "w_gate" in node and "w_up" in node:
+                m = _merge_group([node["w_gate"], node["w_up"]],
+                                 "w_gateup")
+                if m is not None:
+                    node = {k: v for k, v in node.items()
+                            if k not in ("w_gate", "w_up")}
+                    node["w_gateup"] = m
+            return node
+        if isinstance(node, (list, tuple)):
+            return type(node)(visit(v) for v in node)
+        return node
+
+    out = dict(params)
+    out["units"] = visit(params["units"])
+    return out
 
 
 def qeinsum_heads(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:

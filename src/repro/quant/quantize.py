@@ -76,6 +76,14 @@ class QuantConfig:
     # memory (measured +273 GiB/dev on nemotron — §Perf A3) and real
     # quantized deployments keep the logits layer high-precision.
     quant_unembed: bool = False
+    # Per-position DYNAMIC activation quantization (train.make_prefill_
+    # step sets it): reduce the activation min/max over every axis
+    # EXCEPT the sequence axis (second-to-last), so a full-sequence
+    # prefill quantizes each position over the same (B, 1, K) block the
+    # token-by-token decode loop would — the prefill->decode handoff
+    # stays bit-identical without calibration.  Ignored wherever static
+    # calibrated scales are installed, and a no-op at S = 1.
+    act_per_pos: bool = False
     # Pure-inference mode (launch/serve.py sets it): qdot skips the
     # always-on exact STE matmul.  The STE expression y_ste +
     # stop_gradient(y - y_ste) evaluates to y numerically, so skipping

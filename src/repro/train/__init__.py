@@ -1,6 +1,8 @@
 from . import checkpoint, optimizer, step  # noqa: F401
 from .optimizer import OptConfig
-from .step import make_train_step, make_serve_step, make_prefill_step
+from .step import (make_prefill_logits, make_prefill_step,
+                   make_serve_step, make_train_step)
 
 __all__ = ["checkpoint", "optimizer", "step", "OptConfig",
-           "make_train_step", "make_serve_step", "make_prefill_step"]
+           "make_train_step", "make_serve_step", "make_prefill_step",
+           "make_prefill_logits"]

@@ -88,7 +88,36 @@ def make_serve_step(cfg: ArchConfig, qcfg: QuantConfig):
 
 
 def make_prefill_step(cfg: ArchConfig, qcfg: QuantConfig):
-    """Full-sequence forward (inference-prefill shape): returns logits."""
+    """Full-sequence fused prefill: one M = B·S pass through the decode
+    stack, replacing launch/serve.py's old token-by-token prompt loop.
+
+    (params, state, tokens (B, P)) -> (next_tok (B, 1), logits (B, P, V),
+    state), where ``state`` is the post-prefill decode state — causal
+    attention over the fresh KV block, cache written in one slice, and
+    the handoff bit-identical to stepping the prompt token by token
+    (tests/test_prefill.py).  Every qdot in the pass sees M = B·P rows,
+    the regime where the fused quantize->delta->dequant kernel's
+    compute-scale win applies (BENCH_kernels.json `serve_prefill`).
+
+    Dynamic activation quantization runs PER POSITION inside the pass
+    (QuantConfig.act_per_pos): each sequence slice quantizes over the
+    same (B, 1, K) block the token loop would, so uncalibrated serving
+    is also bit-identical to the loop.  Static/calibrated trees ignore
+    the flag (their scales are fixed per layer already)."""
+    import dataclasses
+    qcfg_prefill = dataclasses.replace(qcfg, act_per_pos=True)
+
+    def prefill_step(params, state, tokens):
+        logits, state = T.forward_decode(params, state, tokens, cfg,
+                                         qcfg_prefill)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, logits, state
+    return prefill_step
+
+
+def make_prefill_logits(cfg: ArchConfig, qcfg: QuantConfig):
+    """Cache-free full-sequence forward (the dry-run's prefill-shape
+    lowering): (params, batch) -> logits tail."""
     def prefill_logits(params, batch):
         from repro.models import layers
         tokens = batch["tokens"]
